@@ -1,0 +1,297 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+  table_compression   Tables 2/3/4 analog: NBL vs DROP vs SLEB at equal m
+                      (perplexity + successor-probe accuracy on a trained
+                      small model, offline stand-in for the HF suites)
+  table_calibration   Tables 1/7: Algorithm-2 calibration runtime vs d
+  fig3_prefill        Figure 3: analytic prefill speed-up vs context length
+  table21_kv_cache    Table 21: KV-cache bytes vs context × NBL-m
+  criterion_ablation  Appendix F.3: CCA-bound vs cosine selection
+  kernels             µs/call of the three Pallas kernels (interpret mode —
+                      CPU-emulated, structural check only)
+
+Prints ``name,value,derived`` CSV rows; also writes benchmarks/out.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS: list[tuple[str, object, str]] = []
+
+
+def emit(name: str, value, derived: str = "") -> None:
+    ROWS.append((name, value, derived))
+    print(f"{name},{value},{derived}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+def bench_compression(fast: bool) -> None:
+    """Train a small LM, compress with each method, compare quality."""
+    from repro.configs import get_config
+    from repro.core import drop_compress, nbl_compress, sleb_compress
+    from repro.data import ZipfMarkov, calib_factory
+    from repro.eval import eval_suite
+    from repro.launch.train import train
+
+    cfg = get_config("tiny-dense")
+    steps = 120 if fast else 300
+    out = train(cfg, steps=steps, global_batch=16, seq=64, peak_lr=3e-3,
+                log_every=max(steps // 3, 1), log_fn=lambda s: None)
+    params = out["params"]
+    proc = ZipfMarkov(cfg.vocab_size, seed=0)
+    fac = calib_factory(cfg, batch=4, seq=64, n_batches=4 if fast else 8)
+    evalfac = calib_factory(cfg, batch=4, seq=64, n_batches=4, seed=999)
+
+    base = eval_suite(cfg, params, evalfac, proc.succ)
+    emit("compression/baseline/ppl", round(base["ppl"], 3))
+    emit("compression/baseline/succ_acc", round(base["succ_acc"], 4))
+
+    ms = [1, 2] if fast else [1, 2, 3]
+    for m in ms:
+        ncfg, nparams, _ = nbl_compress(cfg, params, fac, m)
+        e = eval_suite(ncfg, nparams, evalfac, proc.succ)
+        emit(f"compression/attn_nbl-{m}/ppl", round(e["ppl"], 3))
+        emit(f"compression/attn_nbl-{m}/succ_acc", round(e["succ_acc"], 4))
+
+        dcfg, dparams, _ = drop_compress(cfg, params, fac, m)
+        e = eval_suite(dcfg, dparams, evalfac, proc.succ)
+        emit(f"compression/attn_drop-{m}/ppl", round(e["ppl"], 3))
+        emit(f"compression/attn_drop-{m}/succ_acc", round(e["succ_acc"], 4))
+
+        bcfg, bparams, _ = nbl_compress(cfg, params, fac, m, block=True)
+        e = eval_suite(bcfg, bparams, evalfac, proc.succ)
+        emit(f"compression/block_nbl-{m}/ppl", round(e["ppl"], 3))
+
+    if not fast:
+        scfg, sparams, _ = sleb_compress(cfg, params, fac, 2)
+        e = eval_suite(scfg, sparams, evalfac, proc.succ)
+        emit("compression/sleb-2/ppl", round(e["ppl"], 3))
+
+
+# ---------------------------------------------------------------------------
+def bench_calibration_runtime(fast: bool) -> None:
+    """Algorithm-2 cost (moments→eigh→SVD→solve) vs embedding dim; the paper
+    reports 26 s/layer @ d=4096 on A100 (Tables 1/7). O(d³+s·t·d²) scaling
+    is asserted by the cubic fit in tests."""
+    from repro.core.cca import cca_bound_from_moments
+    from repro.core.lmmse import lmmse_from_moments
+    from repro.core.moments import finalize, init_moments, update_moments
+
+    dims = (256, 512) if fast else (256, 512, 1024)
+    tokens = 4096
+    for d in dims:
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal((tokens, d)).astype(np.float32)
+        y = (x @ (rng.standard_normal((d, d)).astype(np.float32) * 0.1))
+        t0 = time.perf_counter()
+        mom = init_moments(d, d)
+        for i in range(0, tokens, 1024):
+            mom = update_moments(mom, x[i:i + 1024], y[i:i + 1024])
+        jax.block_until_ready(mom["sxx"])
+        fin = finalize(mom)
+        cca_bound_from_moments(fin)
+        lmmse_from_moments(fin)
+        dt = time.perf_counter() - t0
+        emit(f"calibration/layer_runtime_d{d}", round(dt * 1e6, 1),
+             "us_per_layer")
+
+
+# ---------------------------------------------------------------------------
+def bench_fig3_prefill(fast: bool) -> None:
+    """Analytic prefill speed-up (K−m)·n²d + m·nd vs K·n²d (paper §4.2);
+    reproduces the Fig. 3 shape: gains grow with context length."""
+    K, d = 32, 4096
+    for n in (2048, 8192, 32_768, 131_072):
+        base = K * n * n * d
+        for m in (4, 8, 12, 16):
+            sped = (K - m) * n * n * d + m * n * d
+            emit(f"prefill_speedup/n{n}/nbl-{m}", round(base / sped, 4),
+                 "analytic")
+
+
+# ---------------------------------------------------------------------------
+def bench_kv_cache(fast: bool) -> None:
+    """Paper Table 21: KV-cache GB for Llama-3.1-8B-class GQA at batch 64,
+    half precision, vs context × NBL-m — the structural cache_bytes() is
+    asserted equal to the analytic 2·bs·n·d·(g/h)·((K−m)/K) formula."""
+    from repro.configs import get_config
+    from repro.core.surgery import compress_config
+    from repro.models.kv_cache import cache_bytes
+
+    cfg = get_config("llama-3.1-8b").replace(compute_dtype="bfloat16")
+    K = cfg.n_blocks
+    for n in ((512, 4096) if fast else (512, 1024, 2048, 4096)):
+        for m in (0, 4, 8, 12, 16):
+            c = compress_config(cfg, cfg.attn_layer_indices()[-m:], "nbl") \
+                if m else cfg
+            got = cache_bytes(c, 64, n) - 4 * (K - m) * n   # minus kpos i32
+            want = 2 * 64 * n * cfg.n_kv_heads * cfg.head_dim * 2 * (K - m)
+            assert got == want, (got, want)
+            emit(f"kv_cache/n{n}/nbl-{m}_GB", round(got / 2**30, 3),
+                 "structural==analytic")
+
+
+# ---------------------------------------------------------------------------
+def bench_criterion_ablation(fast: bool) -> None:
+    """Appendix F.3: CCA-bound vs cosine-distance selection overlap."""
+    from repro.configs import get_config
+    from repro.core import calibrate, rank_layers
+    from repro.data import calib_factory
+    from repro.models import init_params
+
+    cfg = get_config("tiny-dense")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    fac = calib_factory(cfg, batch=4, seq=64, n_batches=4)
+    calib = calibrate(cfg, params, fac)
+    cca = rank_layers(calib, "cca")
+    cos = rank_layers(calib, "cosine")
+    k = 3
+    overlap = len(set(cca[:k]) & set(cos[:k])) / k
+    emit("criterion/cca_vs_cosine_top3_overlap", round(overlap, 3))
+    emit("criterion/cca_ranking", "|".join(map(str, cca)))
+
+
+# ---------------------------------------------------------------------------
+def bench_kernels(fast: bool) -> None:
+    from repro.kernels import ops
+
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 4, 256, 64))
+    k = jax.random.normal(key, (1, 2, 256, 64))
+    v = jax.random.normal(key, (1, 2, 256, 64))
+    x = jax.random.normal(key, (1, 512, 256))
+    w = jax.random.normal(key, (256, 256)) * 0.05
+    b = jnp.zeros((256,))
+    acc = jnp.zeros((256, 256))
+
+    for name, fn in [
+        ("flash_attention", lambda: ops.attention(q, k, v)),
+        ("nbl_linear", lambda: ops.nbl_apply(x, w, b)),
+        ("cov_accum", lambda: ops.cov_update(acc, x[0])),
+    ]:
+        fn()  # compile
+        t0 = time.perf_counter()
+        n = 3
+        for _ in range(n):
+            jax.block_until_ready(fn())
+        emit(f"kernels/{name}",
+             round((time.perf_counter() - t0) / n * 1e6, 1),
+             "us_per_call_interpret")
+
+
+# ---------------------------------------------------------------------------
+def bench_speculative(fast: bool) -> None:
+    """Table 6 analog: NBL-compressed models in a draft-and-verify loop.
+    Reports acceptance rate + tokens per verifier call (the compounding
+    mechanism behind the paper's 4.07×)."""
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core import nbl_compress
+    from repro.data import ZipfMarkov, calib_factory
+    from repro.launch.speculative import speculative_generate
+    from repro.launch.train import train
+
+    cfg = get_config("tiny-dense")
+    params = train(cfg, steps=120 if fast else 200, global_batch=16, seq=64,
+                   peak_lr=3e-3, log_fn=lambda s: None)["params"]
+    fac = calib_factory(cfg, batch=4, seq=64, n_batches=4)
+    proc = ZipfMarkov(cfg.vocab_size, seed=0)
+    prompts = jnp.asarray(proc.sample(2, 12, seed=3))
+    for m in (1, 2):
+        ncfg, nparams, _ = nbl_compress(cfg, params, fac, m)
+        _, stats = speculative_generate(ncfg, nparams, cfg, params,
+                                        prompts, max_new=12, gamma=4)
+        emit(f"spec_decode/nbl-{m}_draft/acceptance",
+             round(stats["acceptance_rate"], 3))
+        emit(f"spec_decode/nbl-{m}_draft/tokens_per_verify",
+             round(stats["tokens_per_verifier_call"], 2))
+
+
+def bench_quant_compose(fast: bool) -> None:
+    """Table 5 analog (§4.3): NBL on a weight-quantized model. Reports the
+    byte compression and the ppl of fp / int8 / int8+NBL (int4 in full
+    mode, matching the paper's AWQ-4bit 70B setup)."""
+    from repro.configs import get_config
+    from repro.core import nbl_compress
+    from repro.data import calib_factory
+    from repro.eval import perplexity
+    from repro.launch.train import train
+    from repro.quant import quantize_model
+
+    cfg = get_config("tiny-dense")
+    params = train(cfg, steps=120, global_batch=16, seq=64, peak_lr=3e-3,
+                   log_fn=lambda s: None)["params"]
+    fac = calib_factory(cfg, batch=4, seq=64, n_batches=4)
+    evalfac = calib_factory(cfg, batch=4, seq=64, n_batches=2, seed=77)
+    emit("quant/fp/ppl", round(perplexity(cfg, params, evalfac), 3))
+    for bits in ((8,) if fast else (8, 4)):
+        qp, rep = quantize_model(cfg, params, bits=bits)
+        emit(f"quant/int{bits}/ppl",
+             round(perplexity(cfg, qp, evalfac), 3))
+        emit(f"quant/int{bits}/compression",
+             round(rep.fp_bytes / max(rep.q_bytes, 1), 2))
+        ncfg, np_, _ = nbl_compress(cfg, qp, fac, 2)
+        emit(f"quant/int{bits}+nbl-2/ppl",
+             round(perplexity(ncfg, np_, evalfac), 3))
+
+
+def bench_lora(fast: bool) -> None:
+    """Appendix F.2: LoRA refinement of NBL layers — marginal by design."""
+    from repro.configs import get_config
+    from repro.core import nbl_compress
+    from repro.core.lora import lora_finetune
+    from repro.data import calib_factory
+    from repro.eval import perplexity
+    from repro.launch.train import train
+
+    cfg = get_config("tiny-dense")
+    params = train(cfg, steps=120, global_batch=16, seq=64, peak_lr=3e-3,
+                   log_fn=lambda s: None)["params"]
+    fac = calib_factory(cfg, batch=4, seq=64, n_batches=4)
+    ncfg, nparams, _ = nbl_compress(cfg, params, fac, 2)
+    evalfac = calib_factory(ncfg, batch=4, seq=64, n_batches=2, seed=99)
+    emit("lora/nbl-2/ppl", round(perplexity(ncfg, nparams, evalfac), 3))
+    tuned = lora_finetune(ncfg, nparams, fac, steps=15 if fast else 30,
+                          rank=4, lr=5e-4)
+    emit("lora/nbl-2+lora/ppl", round(perplexity(ncfg, tuned, evalfac), 3))
+
+
+BENCHES = {
+    "table_compression": bench_compression,
+    "table_calibration": bench_calibration_runtime,
+    "fig3_prefill": bench_fig3_prefill,
+    "table21_kv_cache": bench_kv_cache,
+    "criterion_ablation": bench_criterion_ablation,
+    "spec_decode": bench_speculative,
+    "quant_compose": bench_quant_compose,
+    "lora": bench_lora,
+    "kernels": bench_kernels,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(BENCHES)
+    print("name,value,derived")
+    for name in names:
+        BENCHES[name](args.fast)
+    out = os.path.join(os.path.dirname(__file__), "out.json")
+    with open(out, "w") as f:
+        json.dump([{"name": n, "value": v, "derived": d}
+                   for n, v, d in ROWS], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Fault-tolerant checkpointing: atomic save, auto-resume, elastic re-shard.
+
+Layout (one directory per step):
+
+    <root>/step_00001234.tmp/      # in-flight write (ignored by restore)
+    <root>/step_00001234/
+        manifest.json              # paths, shapes, dtypes, step, mesh shape
+        arrays.npz                 # flat path->array
+    <root>/LATEST                  # atomic pointer (written after rename)
+
+Crash-safety: arrays land in a ``.tmp`` directory that is os.rename()'d
+(atomic on POSIX) only after fsync; a preempted save leaves a ``.tmp``
+husk that restore skips and the next save garbage-collects. This is the
+single-controller analogue of per-host Orbax-style commits; on a real
+multi-host pod each host writes its array shards and host 0 commits the
+manifest last (same protocol, noted in DESIGN.md).
+
+Elastic re-shard: arrays are stored unsharded (addressable halo gathered);
+``restore(sharding=...)`` device_puts onto whatever mesh the restarted job
+has — a 2-pod checkpoint restores onto 1 pod or 4 pods unchanged.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, root: str, *, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+
+    # ---------------------------------------------------------------- save
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None) -> str:
+        name = f"step_{step:010d}"
+        tmp = os.path.join(self.root, name + ".tmp")
+        final = os.path.join(self.root, name)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(tree)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        manifest = {
+            "step": step,
+            "keys": sorted(flat),
+            "shapes": {k: list(v.shape) for k, v in flat.items()},
+            "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                       # atomic commit
+        with open(os.path.join(self.root, "LATEST.tmp"), "w") as f:
+            f.write(name)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(os.path.join(self.root, "LATEST.tmp"),
+                  os.path.join(self.root, "LATEST"))
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:010d}"),
+                          ignore_errors=True)
+        for d in os.listdir(self.root):             # preempted husks
+            if d.endswith(".tmp") and d != "LATEST.tmp":
+                shutil.rmtree(os.path.join(self.root, d), ignore_errors=True)
+
+    # ------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.root):
+            if d.startswith("step_") and not d.endswith(".tmp") \
+                    and os.path.exists(os.path.join(self.root, d,
+                                                    "manifest.json")):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any,
+                sharding_fn=None) -> Any:
+        """Rebuild ``like``-structured pytree. ``sharding_fn(path, leaf)``
+        optionally returns a Sharding for elastic placement."""
+        d = os.path.join(self.root, f"step_{step:010d}")
+        with np.load(os.path.join(d, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path, leaf in paths:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            arr = flat[key]
+            assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape,
+                                                           leaf.shape)
+            if sharding_fn is not None:
+                arr = jax.device_put(arr, sharding_fn(key, leaf))
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def restore_latest(self, like: Any, sharding_fn=None
+                       ) -> tuple[Optional[int], Any]:
+        step = self.latest_step()
+        if step is None:
+            return None, like
+        return step, self.restore(step, like, sharding_fn)

@@ -1,0 +1,20 @@
+"""Arch config registry. Importing this package registers all configs."""
+from repro.configs.base import (  # noqa: F401
+    Block, MoEConfig, ModelConfig, SSMConfig, ShapeConfig, SHAPES, StackGroup,
+    dense_stack, get_config, list_configs, mamba_stack, moe_stack, reduced,
+    register, shape_applicable, vlm_stack, zamba_stack,
+)
+
+# per-arch modules (each registers itself)
+from repro.configs import (  # noqa: F401
+    gemma2_2b, h2o_danube3_4b, minicpm_2b, gemma_7b, llama32_vision_11b,
+    kimi_k2_1t, deepseek_moe_16b, zamba2_1p2b, mamba2_2p7b, musicgen_medium,
+    mistral_7b, llama31_8b, tiny,
+)
+
+ASSIGNED_ARCHS = (
+    "gemma2-2b", "h2o-danube-3-4b", "minicpm-2b", "gemma-7b",
+    "llama-3.2-vision-11b", "kimi-k2-1t-a32b", "deepseek-moe-16b",
+    "zamba2-1.2b", "mamba2-2.7b", "musicgen-medium",
+)
+PAPER_ARCHS = ("mistral-7b", "llama-3.1-8b")

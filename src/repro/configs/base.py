@@ -1,0 +1,311 @@
+"""Config system: model configs, block/stack plans, shapes, registry.
+
+A model is described by a *stack plan*: an ordered tuple of ``StackGroup``s,
+each repeating a short ``unit`` of ``Block`` descriptors. Homogeneous repeated
+units are executed with ``lax.scan`` over stacked params, keeping HLO size
+(and therefore compile time and code size on a 512-way dry-run) O(1) in depth.
+
+NBL surgery (repro/core/surgery.py) rewrites the stack plan: the attention
+sub-block of selected layers becomes ``kind="nbl"`` (a single linear layer with
+retained residual, per Algorithm 2 of the paper) and params are re-sliced so
+every group stays homogeneous and scannable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+
+# --------------------------------------------------------------------------
+# Block / stack plan
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Block:
+    """One residual block (mixer + optional ffn) in the stack.
+
+    kind:
+      "attn"       self-attention (GQA; optional sliding window / softcap)
+      "cross_attn" cross-attention over encoder/frontend embeddings (VLM)
+      "mamba"      Mamba2 SSD block (attention-free; has no separate ffn)
+      "nbl"        NBL-linearized attention: y = W x + b (+ x residual kept)
+      "drop"       attention removed entirely (Attn DROP baseline): y = x
+    ffn:
+      "dense" | "moe" | "none"
+    window: sliding-window size for local attention (None = global).
+    shared: params for this block are shared across all repeats of the group
+      (Zamba2 shared attention block).
+    """
+    kind: str = "attn"
+    ffn: str = "dense"
+    window: Optional[int] = None
+    shared: bool = False
+
+    def replace(self, **kw) -> "Block":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class StackGroup:
+    unit: tuple[Block, ...]
+    repeat: int = 1
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.unit) * self.repeat
+
+
+# --------------------------------------------------------------------------
+# Sub-configs
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int               # ffn hidden size per routed expert
+    n_shared: int = 0           # always-on shared experts (DeepSeek-MoE)
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    dense_ff: int = 0           # ffn size of leading dense layers (0 = d_ff)
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2             # d_inner = expand * d_model
+    conv_kernel: int = 4
+    chunk: int = 256            # SSD chunk length (training/prefill)
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+# --------------------------------------------------------------------------
+# Model config
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | hybrid | ssm | vlm | audio
+    d_model: int
+    vocab_size: int
+    stack: tuple[StackGroup, ...]
+    # attention geometry (ignored by pure-SSM archs)
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    # features
+    mlp_act: str = "silu"       # silu | geglu
+    norm_eps: float = 1e-6
+    rope_theta: float = 10_000.0
+    attn_logit_softcap: Optional[float] = None
+    final_logit_softcap: Optional[float] = None
+    attn_scale: Optional[float] = None     # None -> 1/sqrt(head_dim)
+    tie_embeddings: bool = True
+    # sub-configs
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # modality frontend stub: None | "vision" | "audio"
+    frontend: Optional[str] = None
+    n_frontend_tokens: int = 0  # e.g. image patch tokens fed to cross-attn
+    # long-context capability: True iff every attention block is windowed or
+    # the arch is SSM/hybrid (bounded state). Gates the long_500k shape.
+    sub_quadratic: bool = False
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # NBL bookkeeping: indices of attention blocks already linearized (used to
+    # build compressed configs for dry-runs without running calibration).
+    nbl_layers: tuple[int, ...] = ()
+    # training
+    max_seq_len: int = 8192
+
+    # -- derived ---------------------------------------------------------
+    @property
+    def n_blocks(self) -> int:
+        return sum(g.n_blocks for g in self.stack)
+
+    def blocks(self) -> list[Block]:
+        """Flattened per-position block descriptors."""
+        out: list[Block] = []
+        for g in self.stack:
+            out.extend(list(g.unit) * g.repeat)
+        return out
+
+    def attn_layer_indices(self) -> list[int]:
+        """Global block indices whose mixer is self-attention (NBL candidates).
+
+        Cross-attention blocks are excluded (bimodal inputs, see DESIGN.md);
+        shared blocks are excluded (linearizing one invocation would have to
+        linearize all); mamba blocks are excluded from the *default* candidate
+        set but can be targeted with core.nbl(block_kinds=("mamba",)).
+        """
+        return [i for i, b in enumerate(self.blocks())
+                if b.kind == "attn" and not b.shared]
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def n_params(self) -> int:
+        """Analytic parameter count (matches init exactly; asserted in tests)."""
+        from repro.models.transformer import count_params
+        return count_params(self)
+
+    def n_active_params(self) -> int:
+        from repro.models.transformer import count_params
+        return count_params(self, active_only=True)
+
+
+# --------------------------------------------------------------------------
+# Stack-plan builders
+# --------------------------------------------------------------------------
+
+def dense_stack(n_layers: int, *, window: Optional[int] = None,
+                pattern: tuple[Optional[int], ...] = ()) -> tuple[StackGroup, ...]:
+    """Uniform dense stack; ``pattern`` gives a cycle of per-layer windows
+    (e.g. (4096, None) for Gemma-2 local/global alternation)."""
+    if pattern:
+        period = len(pattern)
+        assert n_layers % period == 0, (n_layers, pattern)
+        unit = tuple(Block(kind="attn", ffn="dense", window=w) for w in pattern)
+        return (StackGroup(unit=unit, repeat=n_layers // period),)
+    unit = (Block(kind="attn", ffn="dense", window=window),)
+    return (StackGroup(unit=unit, repeat=n_layers),)
+
+
+def moe_stack(n_layers: int, n_dense_lead: int = 1) -> tuple[StackGroup, ...]:
+    groups = []
+    if n_dense_lead:
+        groups.append(StackGroup(unit=(Block(kind="attn", ffn="dense"),),
+                                 repeat=n_dense_lead))
+    groups.append(StackGroup(unit=(Block(kind="attn", ffn="moe"),),
+                             repeat=n_layers - n_dense_lead))
+    return tuple(groups)
+
+
+def mamba_stack(n_layers: int) -> tuple[StackGroup, ...]:
+    return (StackGroup(unit=(Block(kind="mamba", ffn="none"),),
+                       repeat=n_layers),)
+
+
+def zamba_stack(n_mamba: int, attn_every: int) -> tuple[StackGroup, ...]:
+    """Zamba2: mamba backbone with a *shared* full transformer block applied
+    after every ``attn_every`` mamba blocks. Trailing mamba layers form a
+    second group."""
+    n_groups = n_mamba // attn_every
+    trailing = n_mamba - n_groups * attn_every
+    unit = tuple(Block(kind="mamba", ffn="none") for _ in range(attn_every))
+    unit = unit + (Block(kind="attn", ffn="dense", shared=True),)
+    groups = [StackGroup(unit=unit, repeat=n_groups)]
+    if trailing:
+        groups.append(StackGroup(unit=(Block(kind="mamba", ffn="none"),),
+                                 repeat=trailing))
+    return tuple(groups)
+
+
+def vlm_stack(n_self: int, cross_every: int) -> tuple[StackGroup, ...]:
+    """Llama-3.2-Vision-style: a cross-attention block after every
+    ``cross_every`` self-attention blocks."""
+    n_groups = n_self // cross_every
+    unit = tuple(Block(kind="attn", ffn="dense") for _ in range(cross_every))
+    unit = unit + (Block(kind="cross_attn", ffn="dense"),)
+    return (StackGroup(unit=unit, repeat=n_groups),)
+
+
+# --------------------------------------------------------------------------
+# Input shapes (assigned)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str            # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k":    ShapeConfig("train_4k",    "train",   4_096,   256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768,  32),
+    "decode_32k":  ShapeConfig("decode_32k",  "decode",  32_768,  128),
+    "long_500k":   ShapeConfig("long_500k",   "decode",  524_288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """(applicable, reason-if-not). long_500k needs sub-quadratic attention."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: 524k dense KV cache/attention is "
+                       "the quadratic regime this shape excludes (DESIGN.md)")
+    return True, ""
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn: Callable[[], ModelConfig]):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str, **overrides: Any) -> ModelConfig:
+    import repro.configs  # noqa: F401  (triggers per-arch module imports)
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    cfg = _REGISTRY[name]()
+    return cfg.replace(**overrides) if overrides else cfg
+
+
+def list_configs() -> list[str]:
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# Reduced (smoke-test) configs
+# --------------------------------------------------------------------------
+
+def reduced(cfg: ModelConfig, *, d_model: int = 64, layers_cap: int = 4,
+            vocab: int = 512) -> ModelConfig:
+    """Shrink any config to a CPU-smoke-testable size while preserving its
+    family features (alternation patterns, MoE routing, shared blocks,
+    softcaps, GeGLU, cross-attn, SSD...)."""
+    head_dim = 16
+    n_heads = max(2, d_model // (2 * head_dim))   # leave room for q dim > d
+    n_kv = max(1, n_heads // 2) if cfg.n_kv_heads < cfg.n_heads else n_heads
+
+    # shrink stack: cap repeats, keep unit structure
+    stack = []
+    for g in cfg.stack:
+        rep = min(g.repeat, max(1, layers_cap // max(1, len(g.unit))))
+        stack.append(StackGroup(unit=g.unit, repeat=rep))
+    moe = None
+    if cfg.moe is not None:
+        moe = MoEConfig(n_experts=8, top_k=min(cfg.moe.top_k, 2), d_expert=32,
+                        n_shared=min(cfg.moe.n_shared, 1),
+                        capacity_factor=2.0, dense_ff=128)
+    ssm = None
+    if cfg.ssm is not None:
+        ssm = SSMConfig(d_state=16, head_dim=16, expand=2, conv_kernel=4,
+                        chunk=32)
+    return cfg.replace(
+        d_model=d_model, vocab_size=vocab, stack=tuple(stack),
+        n_heads=n_heads, n_kv_heads=n_kv, head_dim=head_dim,
+        d_ff=4 * d_model, moe=moe, ssm=ssm,
+        n_frontend_tokens=min(cfg.n_frontend_tokens, 8) or cfg.n_frontend_tokens,
+        max_seq_len=128, param_dtype="float32", compute_dtype="float32",
+    )

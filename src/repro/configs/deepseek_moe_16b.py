@@ -1,0 +1,28 @@
+"""DeepSeek-MoE-16B [arXiv:2401.06066; hf].
+
+28L, d_model=2048, 16H (MHA kv=16), routed-expert d_ff=1408, vocab=102400.
+Fine-grained MoE: 64 routed experts top-6 + 2 shared experts; first layer has
+a dense FFN (d_ff=10944).
+"""
+from repro.configs.base import ModelConfig, MoEConfig, moe_stack, register
+
+
+@register("deepseek-moe-16b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-moe-16b",
+        family="moe",
+        d_model=2048,
+        vocab_size=102_400,
+        stack=moe_stack(28, n_dense_lead=1),
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=128,
+        d_ff=1408,
+        mlp_act="silu",
+        tie_embeddings=False,
+        moe=MoEConfig(n_experts=64, top_k=6, d_expert=1408, n_shared=2,
+                      capacity_factor=1.25, dense_ff=10_944),
+        param_dtype="bfloat16",  # bf16 master weights + f32 Adam moments
+        sub_quadratic=False,
+    )

@@ -1,0 +1,28 @@
+"""Gemma-2 2B [arXiv:2408.00118; hf].
+
+26L, d_model=2304, 8 heads (GQA kv=4), head_dim=256, d_ff=9216 (GeGLU),
+vocab=256000. Local(4096)/global alternating attention, attn logit softcap 50,
+final logit softcap 30, tied embeddings.
+"""
+from repro.configs.base import ModelConfig, dense_stack, register
+
+
+@register("gemma2-2b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-2b",
+        family="dense",
+        d_model=2304,
+        vocab_size=256_000,
+        stack=dense_stack(26, pattern=(4096, None)),  # local, global, ...
+        n_heads=8,
+        n_kv_heads=4,
+        head_dim=256,
+        d_ff=9216,
+        mlp_act="geglu",
+        attn_logit_softcap=50.0,
+        final_logit_softcap=30.0,
+        tie_embeddings=True,
+        param_dtype="bfloat16",  # bf16 master weights + f32 Adam moments
+        sub_quadratic=False,  # global layers every other block
+    )

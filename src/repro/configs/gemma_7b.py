@@ -1,0 +1,25 @@
+"""Gemma-7B [arXiv:2403.08295; hf].
+
+28L, d_model=3072, 16H (kv=16, MHA), head_dim=256, d_ff=24576 (GeGLU),
+vocab=256000, tied embeddings.
+"""
+from repro.configs.base import ModelConfig, dense_stack, register
+
+
+@register("gemma-7b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma-7b",
+        family="dense",
+        d_model=3072,
+        vocab_size=256_000,
+        stack=dense_stack(28),
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=256,
+        d_ff=24_576,
+        mlp_act="geglu",
+        tie_embeddings=True,
+        param_dtype="bfloat16",  # bf16 master weights + f32 Adam moments
+        sub_quadratic=False,
+    )

@@ -1,0 +1,25 @@
+"""H2O-Danube3-4B [arXiv:2401.16818; unverified].
+
+24L, d_model=3840, 32H (GQA kv=8), d_ff=10240, vocab=32000. Llama+Mistral mix
+with sliding-window attention (window 4096) -> sub-quadratic, long_500k runs.
+"""
+from repro.configs.base import ModelConfig, dense_stack, register
+
+
+@register("h2o-danube-3-4b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="h2o-danube-3-4b",
+        family="dense",
+        d_model=3840,
+        vocab_size=32_000,
+        stack=dense_stack(24, window=4096),
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=120,
+        d_ff=10_240,
+        mlp_act="silu",
+        tie_embeddings=False,
+        param_dtype="bfloat16",  # bf16 master weights + f32 Adam moments
+        sub_quadratic=True,  # every layer windowed: KV bounded by window
+    )

@@ -1,0 +1,30 @@
+"""Kimi-K2 1T-A32B [arXiv:2501.kimi2; unverified, paper-table].
+
+61L, d_model=7168, 64H (GQA kv=8), routed-expert d_ff=2048, vocab=163840,
+MoE 384 experts top-8 + 1 shared expert, first layer dense.
+"""
+from repro.configs.base import ModelConfig, MoEConfig, moe_stack, register
+
+
+@register("kimi-k2-1t-a32b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-k2-1t-a32b",
+        family="moe",
+        d_model=7168,
+        vocab_size=163_840,
+        stack=moe_stack(61, n_dense_lead=1),
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=112,
+        d_ff=2048,
+        mlp_act="silu",
+        rope_theta=50_000.0,
+        tie_embeddings=False,
+        moe=MoEConfig(n_experts=384, top_k=8, d_expert=2048, n_shared=1,
+                      capacity_factor=1.25, dense_ff=18_432),
+        sub_quadratic=False,
+        # 1T params: bf16 master weights + int8-EF Adam moments (see
+        # optim/ and EXPERIMENTS.md kimi memory note)
+        param_dtype="bfloat16",
+    )

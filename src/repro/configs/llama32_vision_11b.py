@@ -1,0 +1,30 @@
+"""Llama-3.2-Vision-11B backbone [hf:meta-llama/Llama-3.2-11B-Vision; unverified].
+
+40 self-attn layers, d_model=4096, 32H (GQA kv=8), d_ff=14336, vocab=128256,
+with cross-attention image layers inserted every 5 self-attn layers (8 total).
+The vision frontend is a STUB per spec: input_specs() provides precomputed
+patch embeddings (batch, n_patches, d_model) consumed by the cross-attn blocks.
+"""
+from repro.configs.base import ModelConfig, register, vlm_stack
+
+
+@register("llama-3.2-vision-11b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-11b",
+        family="vlm",
+        d_model=4096,
+        vocab_size=128_256,
+        stack=vlm_stack(n_self=40, cross_every=5),
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=14_336,
+        mlp_act="silu",
+        rope_theta=500_000.0,
+        tie_embeddings=False,
+        frontend="vision",
+        n_frontend_tokens=1600,   # precomputed patch embeddings
+        param_dtype="bfloat16",  # bf16 master weights + f32 Adam moments
+        sub_quadratic=False,
+    )

@@ -1,0 +1,28 @@
+"""Mamba2-2.7B [arXiv:2405.21060; unverified].
+
+64L, d_model=2560, attention-free, ssm_state=128, vocab=50280. SSD
+(state-space duality) blocks; d_inner=5120, 80 heads of dim 64.
+
+NBL applicability: the arch has no self-attention layers, so the paper's
+default target set is empty (DESIGN.md §Arch-applicability). The arch is
+implemented WITHOUT the technique; the generic block-NBL path can still
+linearize SSD mixers via core.nbl(block_kinds=("mamba",)) as an ablation.
+"""
+from repro.configs.base import ModelConfig, SSMConfig, mamba_stack, register
+
+
+@register("mamba2-2.7b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-2.7b",
+        family="ssm",
+        d_model=2560,
+        vocab_size=50_280,
+        stack=mamba_stack(64),
+        d_ff=0,
+        tie_embeddings=True,
+        ssm=SSMConfig(d_state=128, head_dim=64, expand=2, conv_kernel=4,
+                      chunk=256),
+        param_dtype="bfloat16",  # bf16 master weights + f32 Adam moments
+        sub_quadratic=True,
+    )

@@ -1,0 +1,30 @@
+"""MiniCPM-2B [arXiv:2404.06395; hf].
+
+40L, d_model=2304, 36H (GQA kv=36 -> MHA), d_ff=5760, vocab=122753.
+Llama-like architecture; trained with the WSD (warmup-stable-decay) schedule,
+which is implemented in repro/optim/schedules.py and selected by this config.
+"""
+from repro.configs.base import ModelConfig, dense_stack, register
+
+
+@register("minicpm-2b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm-2b",
+        family="dense",
+        d_model=2304,
+        vocab_size=122_753,
+        stack=dense_stack(40),
+        n_heads=36,
+        n_kv_heads=36,
+        head_dim=64,
+        d_ff=5760,
+        mlp_act="silu",
+        tie_embeddings=True,
+        param_dtype="bfloat16",  # bf16 master weights + f32 Adam moments
+        sub_quadratic=False,
+    )
+
+
+# training-schedule hint consumed by launch/train.py
+SCHEDULE = "wsd"

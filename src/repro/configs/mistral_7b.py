@@ -1,0 +1,24 @@
+"""Mistral-7B [arXiv:2310.06825] -- one of the paper's own eval models.
+
+32L, d_model=4096, 32H (GQA kv=8), d_ff=14336, vocab=32000, SWA window 4096.
+"""
+from repro.configs.base import ModelConfig, dense_stack, register
+
+
+@register("mistral-7b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mistral-7b",
+        family="dense",
+        d_model=4096,
+        vocab_size=32_000,
+        stack=dense_stack(32, window=4096),
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=14_336,
+        mlp_act="silu",
+        tie_embeddings=False,
+        param_dtype="bfloat16",  # bf16 master weights + f32 Adam moments
+        sub_quadratic=True,
+    )

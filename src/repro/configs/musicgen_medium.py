@@ -1,0 +1,28 @@
+"""MusicGen-medium [arXiv:2306.05284; hf].
+
+48L decoder-only transformer over EnCodec tokens: d_model=1536, 24H (MHA
+kv=24), d_ff=6144, vocab=2048. The EnCodec frontend is a STUB per spec:
+input_specs() provides precomputed frame embeddings / codebook token ids.
+"""
+from repro.configs.base import ModelConfig, dense_stack, register
+
+
+@register("musicgen-medium")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-medium",
+        family="audio",
+        d_model=1536,
+        vocab_size=2048,
+        stack=dense_stack(48),
+        n_heads=24,
+        n_kv_heads=24,
+        head_dim=64,
+        d_ff=6144,
+        mlp_act="silu",
+        tie_embeddings=False,
+        frontend="audio",
+        n_frontend_tokens=0,
+        param_dtype="bfloat16",  # bf16 master weights + f32 Adam moments
+        sub_quadratic=False,
+    )

@@ -1,0 +1,74 @@
+"""Tiny configs for tests/examples: small but structurally faithful."""
+from repro.configs.base import (
+    ModelConfig, MoEConfig, SSMConfig, dense_stack, moe_stack, mamba_stack,
+    register, vlm_stack, zamba_stack,
+)
+
+
+@register("tiny-dense")
+def tiny_dense() -> ModelConfig:
+    return ModelConfig(
+        name="tiny-dense", family="dense", d_model=64, vocab_size=512,
+        stack=dense_stack(6), n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=256, mlp_act="silu", tie_embeddings=True, sub_quadratic=False,
+        param_dtype="float32", compute_dtype="float32", max_seq_len=128,
+    )
+
+
+@register("tiny-gemma")
+def tiny_gemma() -> ModelConfig:
+    return tiny_dense().replace(
+        name="tiny-gemma", stack=dense_stack(4, pattern=(32, None)),
+        mlp_act="geglu", attn_logit_softcap=50.0, final_logit_softcap=30.0,
+    )
+
+
+@register("tiny-swa")
+def tiny_swa() -> ModelConfig:
+    return tiny_dense().replace(
+        name="tiny-swa", stack=dense_stack(4, window=32), sub_quadratic=True)
+
+
+@register("tiny-moe")
+def tiny_moe() -> ModelConfig:
+    return tiny_dense().replace(
+        name="tiny-moe", family="moe", stack=moe_stack(4, n_dense_lead=1),
+        moe=MoEConfig(n_experts=8, top_k=2, d_expert=64, n_shared=1,
+                      capacity_factor=2.0, dense_ff=256),
+    )
+
+
+@register("tiny-mamba")
+def tiny_mamba() -> ModelConfig:
+    return ModelConfig(
+        name="tiny-mamba", family="ssm", d_model=64, vocab_size=512,
+        stack=mamba_stack(4), d_ff=0, tie_embeddings=True,
+        ssm=SSMConfig(d_state=16, head_dim=16, expand=2, conv_kernel=4,
+                      chunk=16),
+        sub_quadratic=True, param_dtype="float32", compute_dtype="float32",
+        max_seq_len=128,
+    )
+
+
+@register("tiny-zamba")
+def tiny_zamba() -> ModelConfig:
+    return tiny_mamba().replace(
+        name="tiny-zamba", family="hybrid", stack=zamba_stack(5, attn_every=2),
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=256,
+    )
+
+
+@register("tiny-vlm")
+def tiny_vlm() -> ModelConfig:
+    return tiny_dense().replace(
+        name="tiny-vlm", family="vlm", stack=vlm_stack(n_self=4, cross_every=2),
+        frontend="vision", n_frontend_tokens=8, tie_embeddings=False,
+    )
+
+
+@register("tiny-audio")
+def tiny_audio() -> ModelConfig:
+    return tiny_dense().replace(
+        name="tiny-audio", family="audio", vocab_size=64, frontend="audio",
+        tie_embeddings=False,
+    )

@@ -1,0 +1,30 @@
+"""Zamba2-1.2B [arXiv:2411.15242; hf].
+
+38 Mamba2 layers, d_model=2048, ssm_state=64, plus a *shared* full transformer
+block (32H MHA kv=32, d_ff=8192) applied after every 6 mamba blocks (6
+invocations + 2 trailing mamba layers). Hybrid -> sub-quadratic, long_500k runs
+(each shared-attn invocation keeps its own KV cache; decode is O(1) state for
+mamba blocks and O(n) reads for the 6 attention caches).
+"""
+from repro.configs.base import ModelConfig, SSMConfig, register, zamba_stack
+
+
+@register("zamba2-1.2b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-1.2b",
+        family="hybrid",
+        d_model=2048,
+        vocab_size=32_000,
+        stack=zamba_stack(n_mamba=38, attn_every=6),
+        n_heads=32,
+        n_kv_heads=32,
+        head_dim=64,
+        d_ff=8192,
+        mlp_act="silu",
+        tie_embeddings=True,
+        ssm=SSMConfig(d_state=64, head_dim=64, expand=2, conv_kernel=4,
+                      chunk=256),
+        param_dtype="bfloat16",  # bf16 master weights + f32 Adam moments
+        sub_quadratic=True,
+    )

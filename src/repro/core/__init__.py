@@ -1,0 +1,24 @@
+"""The paper's contribution: Neural Block Linearization (NBL).
+
+  moments    streaming distributed (X, Y) moment accumulation
+  cca        canonical correlations + Theorem-3.2 NMSE bound
+  lmmse      Proposition-3.1 closed-form linear estimator
+  calibrate  Algorithm 1/2 driver over a calibration stream
+  selection  CCA-bound / cosine / greedy layer selection
+  surgery    config + param rewriting (keeps models scannable)
+  drop       DROP / SLEB removal baselines
+  api        nbl_compress / reports
+"""
+from repro.core.api import CompressionReport, nbl_compress  # noqa: F401
+from repro.core.calibrate import LayerCalib, calibrate, candidate_layers  # noqa: F401
+from repro.core.cca import (  # noqa: F401
+    canonical_correlations, cca_bound_from_moments, inv_sqrt_psd, nmse_bound,
+)
+from repro.core.drop import drop_compress, sleb_compress  # noqa: F401
+from repro.core.lora import lora_apply, lora_finetune, lora_init  # noqa: F401
+from repro.core.lmmse import lmmse_from_moments, lmmse_mse  # noqa: F401
+from repro.core.moments import (  # noqa: F401
+    finalize, init_moments, merge_moments, psum_moments, update_moments,
+)
+from repro.core.selection import greedy_select, rank_layers, select_layers  # noqa: F401
+from repro.core.surgery import compress, compress_config, compress_params  # noqa: F401

@@ -1,0 +1,86 @@
+"""NBL calibration driver: stream calibration batches through the model,
+accumulate per-layer (X, Y) moments, compute CCA bounds + LMMSE maps.
+
+Memory strategy (paper App. D adapted to accelerators): layers are processed
+in chunks of ``chunk_layers``; for each chunk the calibration stream is
+re-played (data factories are deterministic) and only that chunk's taps are
+alive at once. The moment update itself is jit'd; under a mesh the token
+batch is data-parallel and the d×d accumulators replicate (XLA inserts the
+cross-shard reduction for the sharded-token contraction — the psum of
+DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import cca, lmmse
+from repro.core.moments import finalize, init_moments, update_moments
+from repro.models.transformer import forward_with_taps
+
+
+@dataclasses.dataclass
+class LayerCalib:
+    layer: int
+    bound: float                 # Theorem 3.2 NMSE upper bound
+    cos_dist: float              # DROP's criterion: 1 − E[cos(x, y₊)]
+    rho: np.ndarray              # canonical correlations
+    w: np.ndarray                # LMMSE weight (d_out, d_in)
+    b: np.ndarray                # LMMSE bias (d_out,)
+    mse: float                   # achieved MSE Tr(C_YY) − Tr(W C_XY)
+    nmse: float                  # mse / Tr(C_Y₊Y₊)
+
+    @property
+    def linear(self) -> tuple[np.ndarray, np.ndarray]:
+        return self.w, self.b
+
+
+def candidate_layers(cfg: ModelConfig, block_kinds: Sequence[str] = ("attn",)
+                     ) -> list[int]:
+    """Default NBL candidates: non-shared self-attention blocks. The generic
+    path (paper: "NBL can linearize any block") accepts ("mamba",) etc."""
+    if block_kinds == ("attn",):
+        return cfg.attn_layer_indices()
+    return [i for i, b in enumerate(cfg.blocks())
+            if b.kind in block_kinds and not b.shared]
+
+
+def calibrate(cfg: ModelConfig, params: dict,
+              data_factory: Callable[[], Iterable[dict]], *,
+              layers: Optional[Sequence[int]] = None,
+              tap_block: bool = False,
+              chunk_layers: int = 8,
+              ridge: float = 1e-6) -> dict[int, LayerCalib]:
+    """Run Algorithm 1 steps 3-6 + the (W, b) computation of step 9 for all
+    candidate layers. ``data_factory()`` returns a fresh iterator of batches
+    ({"tokens": (B,S), optional "enc"}) — replayed once per layer chunk."""
+    layers = list(layers if layers is not None else candidate_layers(cfg))
+    d = cfg.d_model
+
+    @jax.jit
+    def step(p, tokens, enc, moms):
+        _, taps = forward_with_taps(cfg, p, tokens, enc=enc,
+                                    tap_layers=tuple(moms.keys()),
+                                    tap_block=tap_block)
+        return {i: update_moments(moms[i], *taps[i]) for i in moms}
+
+    results: dict[int, LayerCalib] = {}
+    for c0 in range(0, len(layers), chunk_layers):
+        chunk = layers[c0:c0 + chunk_layers]
+        moms = {i: init_moments(d, d) for i in chunk}
+        for batch in data_factory():
+            moms = step(params, batch["tokens"], batch.get("enc"), moms)
+        for i in chunk:
+            fin = finalize(jax.device_get(moms[i]))
+            bound, rho = cca.cca_bound_from_moments(fin)
+            w, b = lmmse.lmmse_from_moments(fin, ridge)
+            mse = lmmse.lmmse_mse(fin, w)
+            tr = float(np.trace(fin["cypyp"]))
+            results[i] = LayerCalib(
+                layer=i, bound=bound, cos_dist=1.0 - fin["cos_mean"],
+                rho=rho, w=w, b=b, mse=mse, nmse=mse / max(tr, 1e-30))
+    return results

@@ -1,0 +1,42 @@
+"""Canonical Correlation Analysis and the Theorem-3.2 NMSE bound.
+
+All dense linear algebra here is host-side float64 numpy (the paper runs this
+on CPU/GPU once per layer at calibration time; cost O(d³), App. D).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def inv_sqrt_psd(c: np.ndarray, eps: float = 1e-6) -> np.ndarray:
+    """C^{-1/2} of a symmetric PSD matrix via eigh, eigenvalue-floored."""
+    c = np.asarray(c, np.float64)
+    c = 0.5 * (c + c.T)
+    w, v = np.linalg.eigh(c)
+    floor = max(eps, eps * float(w.max(initial=1.0)))
+    w = np.maximum(w, floor)
+    return (v * (w ** -0.5)) @ v.T
+
+
+def canonical_correlations(cxx: np.ndarray, cyx: np.ndarray,
+                           cyy: np.ndarray, eps: float = 1e-6) -> np.ndarray:
+    """Singular values ρ_i of C_W = C_YY^{-1/2} C_YX C_XX^{-1/2}, clipped to
+    [0, 1] (floating-point can nudge slightly above 1)."""
+    cw = inv_sqrt_psd(cyy, eps) @ np.asarray(cyx, np.float64) @ inv_sqrt_psd(cxx, eps)
+    rho = np.linalg.svd(cw, compute_uv=False)
+    return np.clip(rho, 0.0, 1.0)
+
+
+def nmse_bound(rho: np.ndarray, h_out: int, h_in: int) -> float:
+    """Theorem 3.2: NMSE ≤ (h_out − r) + Σ_{i≤r} (1 − ρ_i²), r = min(h_out, h_in)."""
+    r = min(h_out, h_in)
+    rho = np.asarray(rho, np.float64)[:r]
+    return float((h_out - r) + np.sum(1.0 - rho ** 2))
+
+
+def cca_bound_from_moments(fin: dict) -> tuple[float, np.ndarray]:
+    """Algorithm 2: the bound is computed on (X, Y₊) — the *post-residual*
+    attention output — while the LMMSE weights use (X, Y)."""
+    rho = canonical_correlations(fin["cxx"], fin["cypx"], fin["cypyp"])
+    h_out, h_in = fin["cypx"].shape
+    return nmse_bound(rho, h_out, h_in), rho

@@ -1,0 +1,38 @@
+"""Closed-form LMMSE estimator (Proposition 3.1).
+
+    W = C_YX C_XX^{-1},   b = E[Y] − W E[X].
+
+Solved host-side in float64 via a symmetric solve with a small ridge on
+C_XX (calibration sample noise makes the smallest eigenvalues unreliable;
+the ridge is relative to mean diagonal magnitude).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def lmmse_from_moments(fin: dict, ridge: float = 1e-6
+                       ) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (W (d_out, d_in), b (d_out,)) in float64."""
+    cxx = np.asarray(fin["cxx"], np.float64)
+    cyx = np.asarray(fin["cyx"], np.float64)
+    d = cxx.shape[0]
+    lam = ridge * float(np.trace(cxx)) / d
+    a = cxx + lam * np.eye(d)
+    # W = C_yx A^{-1}  <=>  A W^T = C_yx^T  (A symmetric PD)
+    w = np.linalg.solve(a, cyx.T).T
+    b = fin["ey"] - w @ fin["ex"]
+    return w, b
+
+
+def lmmse_mse(fin: dict, w: np.ndarray) -> float:
+    """Achieved MSE of the estimator: Tr(C_YY − W C_XY) (eq. 12 with the
+    optimal W; also valid as Tr(C_YY) − Tr(W C_XY) for the ridge solution
+    up to O(ridge))."""
+    cyy_tr = float(np.trace(fin["cypyp"]))  # not used; kept for clarity
+    del cyy_tr
+    cyx = np.asarray(fin["cyx"], np.float64)
+    # E‖Y−Ŷ‖² = Tr(C_YY) − Tr(W C_XY); we only have C_Y₊Y₊, so compute
+    # Tr(C_YY) from it: C_Y₊Y₊ = C_YY + C_YX + C_XY + C_XX.
+    cyy = (np.asarray(fin["cypyp"]) - cyx - cyx.T - np.asarray(fin["cxx"]))
+    return float(np.trace(cyy) - np.trace(w @ cyx.T))

@@ -1,0 +1,92 @@
+"""Streaming first/second-moment accumulation for NBL calibration.
+
+The paper (App. D) forms X, Y ∈ R^{(s·t)×d} by stacking all calibration
+tokens and computes covariances in one shot. At 405B scale (and on a
+multi-pod mesh) the token matrix cannot be centralized, so we accumulate raw
+moments *streamingly* per data shard:
+
+    n, Σx, Σy, Σy₊, ΣxᵀX, Σy x᳕, Σy₊x᳕, Σy₊y₊᳕, Σcos(x, y₊)
+
+and merge shards by summation (a `psum` over the data axes under pjit, or a
+tree-add on host). Covariances are finalized once, in float64, on host —
+the O(d³) eigh/SVD is calibration-time, not inference-time (paper App. D).
+
+`Σcos` additionally streams the DROP baseline's cosine-distance criterion
+(1 − E[cos(x, y₊)]) so both selection criteria come from one pass.
+
+Accumulation order is fixed by the data pipeline, so results are bitwise
+deterministic for a given shard count — required for elastic restart of an
+interrupted calibration (see checkpoint/).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_moments(d_in: int, d_out: int, dtype=jnp.float32) -> dict:
+    z = jnp.zeros
+    return {
+        "n": z((), dtype),
+        "sx": z((d_in,), dtype),
+        "sy": z((d_out,), dtype),
+        "syp": z((d_out,), dtype),
+        "sxx": z((d_in, d_in), dtype),
+        "syx": z((d_out, d_in), dtype),
+        "sypx": z((d_out, d_in), dtype),
+        "sypyp": z((d_out, d_out), dtype),
+        "scos": z((), dtype),
+    }
+
+
+def update_moments(state: dict, x: jax.Array, y: jax.Array) -> dict:
+    """Accumulate one batch. x: (..., d_in), y: (..., d_out) — the attention
+    (or block) input and its pre-residual output. y₊ = y + x (Algorithm 2)."""
+    d_in = x.shape[-1]
+    d_out = y.shape[-1]
+    xt = x.reshape(-1, d_in).astype(jnp.float32)
+    yt = y.reshape(-1, d_out).astype(jnp.float32)
+    yp = yt + xt if d_in == d_out else yt
+
+    nrm = (jnp.linalg.norm(xt, axis=-1) * jnp.linalg.norm(yp, axis=-1))
+    cos = (xt * yp).sum(-1) / jnp.maximum(nrm, 1e-20)
+
+    return {
+        "n": state["n"] + xt.shape[0],
+        "sx": state["sx"] + xt.sum(0),
+        "sy": state["sy"] + yt.sum(0),
+        "syp": state["syp"] + yp.sum(0),
+        "sxx": state["sxx"] + xt.T @ xt,
+        "syx": state["syx"] + yt.T @ xt,
+        "sypx": state["sypx"] + yp.T @ xt,
+        "sypyp": state["sypyp"] + yp.T @ yp,
+        "scos": state["scos"] + cos.sum(),
+    }
+
+
+def merge_moments(a: dict, b: dict) -> dict:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def psum_moments(state: dict, axes) -> dict:
+    """Cross-shard reduction inside shard_map'd calibration."""
+    return jax.tree.map(lambda v: jax.lax.psum(v, axes), state)
+
+
+def finalize(state: dict) -> dict:
+    """Host-side float64 conversion to means/covariances (unbiased)."""
+    s = {k: np.asarray(v, np.float64) for k, v in state.items()}
+    n = float(s["n"])
+    assert n > 1, "need >1 calibration tokens"
+    ex, ey, eyp = s["sx"] / n, s["sy"] / n, s["syp"] / n
+    c = 1.0 / (n - 1.0)
+    return {
+        "n": n,
+        "ex": ex, "ey": ey, "eyp": eyp,
+        "cxx": c * (s["sxx"] - n * np.outer(ex, ex)),
+        "cyx": c * (s["syx"] - n * np.outer(ey, ex)),
+        "cypx": c * (s["sypx"] - n * np.outer(eyp, ex)),
+        "cypyp": c * (s["sypyp"] - n * np.outer(eyp, eyp)),
+        "cos_mean": float(s["scos"]) / n,
+    }

@@ -1,0 +1,152 @@
+"""Model surgery: rewrite config stack-plans and re-stack params after
+linearizing (NBL) or removing (DROP/SLEB) blocks.
+
+The surgeon keeps the model *scannable*: after transforming per-layer block
+descriptors it re-groups the flat block list into maximal repeated runs
+(periods up to 8), so a dense model with m linearized layers lowers to
+O(2m+1) scan groups instead of O(K) unrolled blocks.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import Block, ModelConfig, StackGroup
+from repro.models.transformer import layer_params
+
+MODES = ("nbl", "drop", "nbl_block", "drop_block")
+
+
+def transform_block(blk: Block, mode: str) -> Block:
+    if mode == "nbl":
+        return blk.replace(kind="nbl", window=None)
+    if mode == "drop":
+        return blk.replace(kind="drop", window=None)
+    if mode == "nbl_block":
+        return blk.replace(kind="nbl_block", ffn="none", window=None,
+                           shared=False)
+    if mode == "drop_block":
+        return blk.replace(kind="drop_block", ffn="none", window=None,
+                           shared=False)
+    raise ValueError(mode)
+
+
+def _regroup(blocks: list[Block], max_period: int = 8) -> tuple[StackGroup, ...]:
+    """Greedy periodic run-length grouping of a flat block list."""
+    groups: list[StackGroup] = []
+    i, n = 0, len(blocks)
+    while i < n:
+        best_unit, best_rep, best_cover = (blocks[i],), 1, 1
+        for period in range(1, max_period + 1):
+            if i + period > n:
+                break
+            unit = tuple(blocks[i:i + period])
+            rep = 1
+            while (i + (rep + 1) * period <= n
+                   and tuple(blocks[i + rep * period:
+                             i + (rep + 1) * period]) == unit):
+                rep += 1
+            cover = rep * period
+            # HLO size ∝ unit length, so only repeated units beat the
+            # single-block fallback; among those prefer more coverage,
+            # then shorter units.
+            if rep >= 2 and (cover > best_cover
+                             or (cover == best_cover
+                                 and period < len(best_unit))):
+                best_unit, best_rep, best_cover = unit, rep, cover
+        groups.append(StackGroup(unit=best_unit, repeat=best_rep))
+        i += best_cover
+    return tuple(groups)
+
+
+def compress_config(cfg: ModelConfig, layer_ids: Iterable[int],
+                    mode: str = "nbl") -> ModelConfig:
+    """New config with ``layer_ids`` transformed per ``mode``."""
+    assert mode in MODES, mode
+    ids = set(layer_ids)
+    blocks = cfg.blocks()
+    for i in ids:
+        blocks[i] = transform_block(blocks[i], mode)
+    nbl_prev = set(cfg.nbl_layers)
+    if mode in ("nbl", "nbl_block"):
+        nbl_prev |= ids
+    return cfg.replace(stack=_regroup(blocks),
+                       nbl_layers=tuple(sorted(nbl_prev)))
+
+
+def _transform_params(blk_old: Block, p_old: dict, mode: str,
+                      linear: Optional[tuple[np.ndarray, np.ndarray]],
+                      dtype) -> dict:
+    """Per-layer param rewrite. ``linear`` = (W (d_out,d_in), b) from LMMSE.
+    The model computes h = x @ w + b, so w stores W᳕."""
+    if mode in ("nbl", "nbl_block"):
+        assert linear is not None, "NBL needs LMMSE (W, b)"
+        w, b = linear
+        mixer = {"w": jnp.asarray(np.asarray(w).T, dtype),
+                 "b": jnp.asarray(np.asarray(b), dtype)}
+        if mode == "nbl_block":
+            return {"mixer": mixer}
+        p = {"mixer": mixer}
+    elif mode == "drop":
+        p = {}
+    else:  # drop_block
+        return {}
+    # retain the FFN path (and its norm) untouched
+    for k in ("norm2", "ffn"):
+        if k in p_old:
+            p[k] = p_old[k]
+    return p
+
+
+def compress_params(cfg: ModelConfig, params: dict, new_cfg: ModelConfig,
+                    layer_ids: Iterable[int], mode: str = "nbl",
+                    linear_maps: Optional[Mapping[int, tuple]] = None) -> dict:
+    """Re-stack params for ``new_cfg`` (produced by compress_config).
+
+    Shared blocks keep a single copy per group; if regrouping splits a shared
+    block across groups each group keeps its own copy (small, documented).
+    """
+    ids = set(layer_ids)
+    dtype = jnp.dtype(cfg.param_dtype)
+    old_blocks = cfg.blocks()
+    per_layer = []
+    for i, blk in enumerate(old_blocks):
+        p_i, _ = layer_params(cfg, params, i)
+        if i in ids:
+            lin = None if linear_maps is None else linear_maps.get(i)
+            p_i = _transform_params(blk, p_i, mode, lin, dtype)
+        per_layer.append(p_i)
+
+    new_params = {k: v for k, v in params.items() if k != "groups"}
+    groups = []
+    i = 0
+    for g in new_cfg.stack:
+        scanned, shared = [], []
+        for u, blk in enumerate(g.unit):
+            layer_ps = [per_layer[i + r * len(g.unit) + u]
+                        for r in range(g.repeat)]
+            if blk.shared:
+                shared.append(layer_ps[0])
+                scanned.append(None)
+            else:
+                scanned.append(jax.tree.map(
+                    lambda *a: jnp.stack(a), *layer_ps))
+                shared.append(None)
+        groups.append({"scanned": scanned, "shared": shared})
+        i += g.n_blocks
+    new_params["groups"] = groups
+    return new_params
+
+
+def compress(cfg: ModelConfig, params: dict, layer_ids: Iterable[int],
+             mode: str = "nbl",
+             linear_maps: Optional[Mapping[int, tuple]] = None
+             ) -> tuple[ModelConfig, dict]:
+    layer_ids = list(layer_ids)
+    new_cfg = compress_config(cfg, layer_ids, mode)
+    new_params = compress_params(cfg, params, new_cfg, layer_ids, mode,
+                                 linear_maps)
+    return new_cfg, new_params

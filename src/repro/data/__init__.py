@@ -1,0 +1,2 @@
+from repro.data.synthetic import ZipfMarkov, lm_batches, calib_factory  # noqa: F401
+from repro.data.loader import ShardedLoader  # noqa: F401

@@ -1,0 +1,63 @@
+"""Host-sharded data loader for multi-pod training.
+
+Each host owns global_batch / n_hosts rows of every global step. Assignment
+is a pure function of (step, host_index, n_hosts):
+
+    rows(step, h) = [h * per_host, (h+1) * per_host)
+
+so (a) an *elastic* restart with a different host count re-partitions the
+same global stream without skipping or duplicating data, and (b) *straggler
+mitigation* — a slow/failed host's rows can be deterministically re-assigned
+to a healthy host (``reassign``) while preserving the global batch content.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.data.synthetic import ZipfMarkov
+
+
+class ShardedLoader:
+    def __init__(self, vocab_size: int, global_batch: int, seq: int, *,
+                 seed: int = 0, host_index: int = 0, n_hosts: int = 1):
+        assert global_batch % n_hosts == 0, (global_batch, n_hosts)
+        self.vocab = vocab_size
+        self.global_batch = global_batch
+        self.seq = seq
+        self.seed = seed
+        self.host_index = host_index
+        self.n_hosts = n_hosts
+        self.proc = ZipfMarkov(vocab_size, seed=seed)
+        self._extra_hosts: list[int] = []   # stragglers we cover for
+
+    @property
+    def per_host(self) -> int:
+        return self.global_batch // self.n_hosts
+
+    def reassign(self, failed_host: int) -> None:
+        """Take over a straggler/failed host's shard (deterministic)."""
+        if failed_host not in self._extra_hosts:
+            self._extra_hosts.append(failed_host)
+
+    def _host_rows(self, step: int, host: int) -> np.ndarray:
+        """The rows of the *global* batch owned by ``host`` at ``step``.
+        Sampling is per-row-block so any host can materialize any shard."""
+        return self.proc.sample(self.per_host, self.seq,
+                                (self.seed * 1_000_003 + step) * 4096 + host)
+
+    def batch(self, step: int) -> dict:
+        hosts = [self.host_index, *self._extra_hosts]
+        toks = np.concatenate([self._host_rows(step, h) for h in hosts])
+        labels = np.full_like(toks, -1)
+        labels[:, :-1] = toks[:, 1:]
+        return {"tokens": toks, "labels": labels}
+
+    def global_batch_at(self, step: int) -> dict:
+        """All hosts' rows (single-host testing / verification)."""
+        toks = np.concatenate([self._host_rows(step, h)
+                               for h in range(self.n_hosts)])
+        labels = np.full_like(toks, -1)
+        labels[:, :-1] = toks[:, 1:]
+        return {"tokens": toks, "labels": labels}

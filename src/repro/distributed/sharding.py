@@ -1,0 +1,221 @@
+"""Per-tensor PartitionSpec rules (DP/TP/EP/FSDP + pod axis).
+
+Logical placement by leaf name (resolved against the ambient mesh, with
+divisibility guards — e.g. gemma2's 8 KV heads silently replicate over a
+16-way model axis instead of erroring):
+
+  embed (V,d)            ("model", "dp")      vocab-TP + FSDP
+  head (d,V)             ("dp", "model")
+  wq/wk/wv (d,H·hd)      ("dp", "model")      head-TP, FSDP on d
+  wo (H·hd, d)           ("model", "dp")      reduce-scatter pattern
+  mlp w_gate/up (d,ff)   ("dp", "model")
+  mlp w_down (ff,d)      ("model", "dp")
+  moe experts (E,d,ff)   ("model", "dp", -)   EP on expert dim + FSDP
+  moe w_down (E,ff,d)    ("model", -, "dp")
+  mamba in_proj (d,ch)   ("dp", "model")      channel-TP
+  mamba out_proj (di,d)  ("model", "dp")
+  nbl w (d,d)            ("dp", "model")      the replacement GEMM is TP'd
+  1-D / scalars          replicated
+
+Stacked (scanned) block params carry a leading layer dim that stays
+unsharded (scan slices it every step). "dp" means ("pod","data") — weight
+sharding over the DP axes is FSDP/ZeRO-3: XLA inserts per-layer all-gathers
+inside the scan, overlapping them with compute.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.api import shaped_spec
+
+# name -> logical axes for the TRAILING dims (None padded on the left)
+_RULES: dict[str, tuple] = {
+    "embed": ("model", "dp"),
+    "head": ("dp", "model"),
+    "wq": ("dp", "model"),
+    "wk": ("dp", "model"),
+    "wv": ("dp", "model"),
+    "wo": ("model", "dp"),
+    "w_up": ("dp", "model"),
+    "w_down": ("model", "dp"),
+    "in_proj": ("dp", "model"),
+    "out_proj": ("model", "dp"),
+    "conv_w": (None, "model"),
+    "conv_b": ("model",),
+    "router": (None, None),
+    "w": ("dp", "model"),          # NBL replacement linear
+    "b": (None,),
+    "norm_w": (None,),
+}
+# expert-stacked MoE weights (ndim >= 3 after stripping the layer dim)
+_MOE_RULES: dict[str, tuple] = {
+    "w_gate": ("model", "dp", None),
+    "w_up": ("model", "dp", None),
+    "w_down": ("model", None, "dp"),
+}
+_DENSE_W_GATE = ("dp", "model")
+
+
+def _leaf_logical(path: tuple, leaf) -> tuple:
+    names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    name = names[-1] if names else ""
+    stacked = "scanned" in names
+    ndim = leaf.ndim
+    core = ndim - (1 if stacked else 0)
+
+    if name == "w_gate":
+        logical = _MOE_RULES["w_gate"] if core == 3 else _DENSE_W_GATE
+    elif name in _MOE_RULES and core == 3:
+        logical = _MOE_RULES[name]
+    elif name in _RULES:
+        logical = _RULES[name]
+    else:
+        logical = ()
+    logical = tuple(logical[-core:]) if core else ()
+    pad = ndim - len(logical)
+    return (None,) * pad + logical
+
+
+def logical_axes(tree: Any) -> Any:
+    """Pytree of logical-axis tuples mirroring ``tree``."""
+    paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [_leaf_logical(p, l) for p, l in paths])
+
+
+# FSDP (dp-axis weight sharding) is only worth its all-gathers/reduces when
+# the tensor-parallel shard alone is big; below this per-shard size the
+# leaf stays replicated across DP (saves the gradient/activation reduction
+# traffic that dominated the MoE train cells — EXPERIMENTS.md §Perf H2).
+FSDP_MIN_SHARD_BYTES = 0   # 0 = always FSDP; raising it was REFUTED for
+# MoE (XLA replicates the dispatch compute when experts replicate — 2.3×
+# FLOPs, 2.3× collective bytes; see EXPERIMENTS.md §Perf H2 iteration 1).
+
+
+def param_specs(tree: Any,
+                fsdp_min_bytes: int = FSDP_MIN_SHARD_BYTES) -> Any:
+    """Pytree of PartitionSpec (resolved + divisibility-guarded) for params
+    (or optimizer state / EF error mirroring params). Call under the mesh."""
+    from repro.distributed.api import axis_size, dp_axes
+    paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    dp = set(dp_axes())
+
+    def one(p, leaf):
+        logical = _leaf_logical(p, leaf)
+        spec = shaped_spec(leaf.shape, *logical)
+        # estimate per-shard bytes under the non-dp axes only
+        denom = 1
+        for s in spec:
+            for a in (s if isinstance(s, tuple) else (s,) if s else ()):
+                if a not in dp:
+                    denom *= axis_size(a)
+        n = leaf.dtype.itemsize
+        for d in leaf.shape:
+            n *= d
+        if n // max(denom, 1) < fsdp_min_bytes:
+            # drop dp axes -> replicated across DP (no FSDP gathers)
+            stripped = []
+            for s in spec:
+                if isinstance(s, tuple):
+                    rest = tuple(a for a in s if a not in dp)
+                    stripped.append(rest if rest else None)
+                else:
+                    stripped.append(None if s in dp else s)
+            spec = P(*stripped)
+        return spec
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in paths])
+
+
+def batch_specs(tree: Any) -> Any:
+    """Data batches: leading dim over ("pod","data")."""
+    def one(leaf):
+        return shaped_spec(leaf.shape,
+                           *(("dp",) + (None,) * (leaf.ndim - 1)))
+    return jax.tree.map(one, tree)
+
+
+def cache_specs(tree: Any) -> Any:
+    """KV/state caches. Layout (stack, batch, heads, time, hd) or
+    (stack, batch, ...) for SSM state. Batch → dp; heads → model when
+    divisible, else the time/state dim → model (sequence-parallel decode)."""
+    def one(leaf):
+        if leaf.ndim == 5:        # (L, B, KV, T, hd)
+            s = shaped_spec(leaf.shape, None, "dp", "model", None, None)
+            if s[2] is None:      # KV heads don't divide -> try head_dim
+                # (decode scores psum over the contracted hd is tiny; a
+                # time-sharded ring turns every slot write into a
+                # full-cache select — EXPERIMENTS.md §Perf H3)
+                s = shaped_spec(leaf.shape, None, "dp", None, None, "model")
+            if s[4] is None and s[2] is None:   # last resort: time
+                s = shaped_spec(leaf.shape, None, "dp", None, "model", None)
+            return s
+        if leaf.ndim == 4:        # (L, B, H, P)/(L, B, k, ch) mamba-ish
+            return shaped_spec(leaf.shape, None, "dp", "model", None)
+        if leaf.ndim == 2:        # (L, W) kpos
+            return shaped_spec(leaf.shape, None, None)
+        return shaped_spec(leaf.shape,
+                           *((None, "dp") + (None,) * (leaf.ndim - 2)))
+    return jax.tree.map(one, tree)
+
+
+def zero1_specs(shapes_tree: Any, pspecs_tree: Any) -> Any:
+    """ZeRO-1 optimizer-moment specs: the weight's own spec plus the DP
+    axes on the first still-replicated, divisible dimension. Each DP
+    replica then holds 1/|dp| of the Adam state; XLA reshards grads into
+    the moment layout and all-gathers only the param delta."""
+    from repro.distributed.api import dp_axes, axis_size
+    dp = dp_axes()
+    dp_n = 1
+    for a in dp:
+        dp_n *= axis_size(a)
+
+    def one(leaf, spec):
+        if not dp or leaf.ndim == 0:
+            return spec
+        parts = list(spec) + [None] * (leaf.ndim - len(spec))
+        used = set()
+        for s in parts:
+            for a in (s if isinstance(s, tuple) else (s,) if s else ()):
+                used.add(a)
+        free = tuple(a for a in dp if a not in used)
+        if not free:
+            return spec
+        free_n = 1
+        for a in free:
+            free_n *= axis_size(a)
+        for d in range(leaf.ndim):
+            if parts[d] is None and leaf.shape[d] % free_n == 0:
+                parts[d] = free if len(free) > 1 else free[0]
+                break
+        return P(*parts)
+
+    return jax.tree.map(one, shapes_tree, pspecs_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def named(tree_specs: Any, mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def bytes_per_device(shapes_tree: Any, specs_tree: Any, mesh) -> int:
+    """Analytic bytes/device given eval_shape + specs (pre-compile check)."""
+    axis = dict(zip(mesh.axis_names, np.asarray(mesh.devices).shape))
+    total = 0
+    for leaf, spec in zip(jax.tree.leaves(shapes_tree),
+                          jax.tree.leaves(specs_tree,
+                                          is_leaf=lambda x: isinstance(x, P))):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        denom = 1
+        for s in spec:
+            for a in (s if isinstance(s, tuple) else (s,) if s else ()):
+                denom *= axis[a]
+        total += n * leaf.dtype.itemsize // max(denom, 1)
+    return total

@@ -1,0 +1,1 @@
+from repro.eval.perplexity import perplexity, eval_suite  # noqa: F401

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  flash_attention  the prefill cost NBL removes (O(S²) baseline layer)
+  nbl_linear       the fused replacement block NBL inserts (x@W+b+x)
+  cov_accum        the calibration Gram-update hot spot (C += XᵀX)
+  ssd_chunk        Mamba2 intra-chunk SSD tile (the H1 memory-bound fix)
+
+Each has a pure-jnp oracle in ref.py and jit'd shape-safe wrappers in
+ops.py; validated with interpret=True on CPU, targeted at TPU Mosaic.
+"""
+from repro.kernels.cov_accum import cov_accum  # noqa: F401
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.nbl_linear import nbl_linear  # noqa: F401
+from repro.kernels.ssd_chunk import ssd_chunk  # noqa: F401
+from repro.kernels import ops, ref  # noqa: F401

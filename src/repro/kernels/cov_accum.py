@@ -1,0 +1,66 @@
+"""Covariance-accumulation kernel: C += Xᵀ X (the calibration hot spot).
+
+The paper's calibration cost is O(s·t·d²), dominated by the Gram updates
+ΣXᵀX / ΣYXᵀ / ΣY₊Y₊ᵀ (App. D). On TPU we tile the token dimension through
+VMEM: grid (D/bi, D/bj, T/bt) with tokens innermost, an f32 VMEM accumulator
+per (bi, bj) output tile, and the running HBM accumulator added once at the
+final token block (input_output_aliased so the (d, d) buffer is updated in
+place, not reallocated per batch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(xi_ref, xj_ref, acc_ref, o_ref, scr, *, n_tblocks: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        scr[...] = jnp.zeros_like(scr)
+
+    xi = xi_ref[...].astype(jnp.float32)       # (bt, bi)
+    xj = xj_ref[...].astype(jnp.float32)       # (bt, bj)
+    scr[...] += jax.lax.dot_general(xi, xj, (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+
+    @pl.when(ti == n_tblocks - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...] + scr[...]
+
+
+def cov_accum(acc: jax.Array, x: jax.Array, y: jax.Array | None = None, *,
+              block_d: int = 256, block_t: int = 512,
+              interpret: bool = False) -> jax.Array:
+    """acc: (Dy, Dx) f32 running sum; x: (T, Dx). Returns acc + yᵀx
+    (y defaults to x → Gram update acc + xᵀx)."""
+    y = x if y is None else y
+    t, dx = x.shape
+    dy = y.shape[1]
+    assert y.shape[0] == t and acc.shape == (dy, dx)
+    bi = min(block_d, dy)
+    bj = min(block_d, dx)
+    bt = min(block_t, t)
+    assert dy % bi == 0 and dx % bj == 0 and t % bt == 0
+    nt = t // bt
+
+    kern = functools.partial(_kernel, n_tblocks=nt)
+    return pl.pallas_call(
+        kern,
+        grid=(dy // bi, dx // bj, nt),
+        in_specs=[
+            pl.BlockSpec((bt, bi), lambda i, j, ti: (ti, i)),
+            pl.BlockSpec((bt, bj), lambda i, j, ti: (ti, j)),
+            pl.BlockSpec((bi, bj), lambda i, j, ti: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bi, bj), lambda i, j, ti: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((dy, dx), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bi, bj), jnp.float32)],
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(y, x, acc)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose-swept in tests)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(q, k, v, *, scale: Optional[float] = None,
+                        causal: bool = True, window: Optional[int] = None,
+                        softcap: Optional[float] = None) -> jax.Array:
+    """Naive full-softmax attention. q: (B,H,S,D); k, v: (B,KV,T,D)."""
+    b, h, s, d = q.shape
+    kv, t = k.shape[1], k.shape[2]
+    rep = h // kv
+    scale = d ** -0.5 if scale is None else scale
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def nbl_linear_ref(x, w, b, *, residual: bool = True) -> jax.Array:
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32)
+    if residual:
+        y = y + x.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def ssd_chunk_ref(x, a, b, c):
+    """Intra-chunk SSD oracle. Shapes as kernels.ssd_chunk.
+    Returns (y_intra, S (B,NC,H,N,P), a_tot)."""
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    cs = jnp.cumsum(af, axis=2)                          # (B,NC,C,H)
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]   # (B,NC,C,C,H)
+    ch = x.shape[2]
+    tri = jnp.tril(jnp.ones((ch, ch), bool))
+    l_mat = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bzin,bzjn->bzij", cf, bf)
+    y = jnp.einsum("bzij,bzijh,bzjhp->bzihp", cb, l_mat, xf)
+    decay = jnp.exp(cs[:, :, -1:, :] - cs)               # (B,NC,C,H)
+    s = jnp.einsum("bzch,bzcn,bzchp->bzhnp", decay, bf, xf)
+    return y, s, cs[:, :, -1]
+
+
+def cov_accum_ref(acc, x, y=None) -> jax.Array:
+    y = x if y is None else y
+    return acc + y.astype(jnp.float32).T @ x.astype(jnp.float32)

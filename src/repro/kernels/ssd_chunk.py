@@ -1,0 +1,102 @@
+"""Pallas SSD intra-chunk kernel (Mamba2's hot spot, TPU-native).
+
+EXPERIMENTS.md §Perf H1 shows the XLA SSD path is memory-bound with a flat
+optimum in chunk size: the (c×c) decay tensor L = exp(segsum(a)), the
+(c×c) C·Bᵀ Gram tile and the chunk state all round-trip HBM between the
+fusions XLA builds. This kernel is the hardware adaptation the Mamba2
+authors make with Triton on GPU: one grid step owns a whole
+(chunk × head) tile in VMEM — builds L in registers, runs the two MXU
+matmuls (CBᵀ∘L)·x and the decay-weighted state update, and writes ONLY
+y_intra and the per-chunk state back to HBM. Traffic per chunk drops from
+~8 materialized (c,c)/(c,p)-sized passes to x/B/C/a reads + y/S writes.
+
+Grid: (batch, n_chunks, heads). The inter-chunk recurrence (tiny,
+sequential over n_chunks) stays in XLA — see models/ssm.py.
+Validated in interpret mode against ref.ssd_chunk_ref (pure-jnp oracle,
+itself equivalent to models/ssm._ssd_chunked's intra-chunk math).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref, y_ref, s_ref, atot_ref):
+    x = x_ref[0, 0, :, 0].astype(jnp.float32)        # (c, p)
+    a = a_ref[0, 0, :, 0].astype(jnp.float32)        # (c,)
+    bb = b_ref[0, 0].astype(jnp.float32)             # (c, n)
+    cc = c_ref[0, 0].astype(jnp.float32)             # (c, n)
+    c = x.shape[0]
+
+    cs = jnp.cumsum(a)                               # (c,)
+    # L[i, j] = exp(cs_i - cs_j) for i >= j else 0   (decay, in-registers)
+    diff = cs[:, None] - cs[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    l_mat = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+
+    # y_intra = ((C Bᵀ) ∘ L) x
+    cb = jax.lax.dot_general(cc, bb, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (c, c)
+    y = jax.lax.dot(cb * l_mat, x, preferred_element_type=jnp.float32)
+    y_ref[0, 0, :, 0] = y.astype(y_ref.dtype)
+
+    # chunk state S = Σ_j exp(cs_last − cs_j)·B_j ⊗ x_j    (n, p)
+    decay = jnp.exp(cs[c - 1] - cs)                  # (c,)
+    s = jax.lax.dot_general(bb * decay[:, None], x,
+                            (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s_ref[0, 0, 0] = s.astype(s_ref.dtype)
+    atot_ref[0, 0, 0] = cs[c - 1]
+
+
+def ssd_chunk(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array, *,
+              interpret: bool = False):
+    """Intra-chunk SSD.
+
+    x: (B, NC, C, H, P) dt-weighted inputs; a: (B, NC, C, H) log-decays;
+    b, c: (B, NC, C, N) input/output projections (shared across heads).
+    Returns (y_intra (B,NC,C,H,P) f32, S (B,NC,H,N,P) f32,
+             a_tot (B,NC,H) f32).
+    """
+    bsz, nc, ch, h, p = x.shape
+    n = b.shape[-1]
+
+    grid = (bsz * nc, h)
+    # collapse (B, NC) into one grid dim; heads in the second
+    x2 = x.reshape(bsz * nc, ch, h, p)
+    a2 = a.reshape(bsz * nc, ch, h)
+    b2 = b.reshape(bsz * nc, ch, n)
+    c2 = c.reshape(bsz * nc, ch, n)
+
+    y, s, atot = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, ch, 1, p),
+                         lambda g, hi: (g, 0, 0, hi, 0)),
+            pl.BlockSpec((1, 1, ch, 1),
+                         lambda g, hi: (g, 0, 0, hi)),
+            pl.BlockSpec((1, 1, ch, n), lambda g, hi: (g, 0, 0, 0)),
+            pl.BlockSpec((1, 1, ch, n), lambda g, hi: (g, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, ch, 1, p),
+                         lambda g, hi: (g, 0, 0, hi, 0)),
+            pl.BlockSpec((1, 1, 1, n, p), lambda g, hi: (g, 0, hi, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda g, hi: (g, 0, hi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz * nc, 1, ch, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz * nc, 1, h, n, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz * nc, 1, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x2[:, None], a2[:, None], b2[:, None], c2[:, None])
+    return (y.reshape(bsz, nc, ch, h, p),
+            s.reshape(bsz, nc, h, n, p),
+            atot.reshape(bsz, nc, h))

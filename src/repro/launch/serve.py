@@ -1,0 +1,73 @@
+"""Serving driver: batched prefill + autoregressive decode.
+
+NBL-linearized layers carry no KV cache, so a compressed model's serve
+state is (K−m)/K of the baseline's — visible directly in the dry-run
+memory analysis and in benchmarks/kv_cache.py (paper §4.2 / Table 21).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import cache_specs, param_specs
+from repro.launch.specs import cache_shapes, param_shapes
+from repro.models import decode_step, prefill
+
+
+def make_serve_fns(cfg: ModelConfig, *, batch: int, prompt_len: int,
+                   max_new: int, donate: bool = True):
+    """Returns (prefill_jit, decode_jit). Call under the serving mesh."""
+    cache_len = prompt_len + max_new
+    pspecs = param_specs(param_shapes(cfg))
+    cspecs = cache_specs(cache_shapes(cfg, batch, cache_len))
+
+    def _prefill(params, tokens, enc=None):
+        return prefill(cfg, params, tokens, enc=enc, cache_len=cache_len)
+
+    def _decode(params, token, cache, pos):
+        return decode_step(cfg, params, token, cache, pos)
+
+    enc_spec = (P("data", None, None),) if cfg.family == "vlm" else ()
+    prefill_jit = jax.jit(
+        _prefill,
+        in_shardings=(pspecs, P("data", None)) + enc_spec,
+        out_shardings=(None, cspecs))
+    decode_jit = jax.jit(
+        _decode,
+        in_shardings=(pspecs, P("data", None), cspecs, P()),
+        out_shardings=(None, cspecs),
+        donate_argnums=(2,) if donate else ())
+    return prefill_jit, decode_jit
+
+
+def generate(cfg: ModelConfig, params, tokens, *, max_new: int,
+             enc=None, greedy: bool = True, seed: int = 0,
+             use_jit_fns: Optional[tuple] = None):
+    """Batched generation. tokens: (B, S) int32 prompt. Returns (B, max_new)."""
+    b, s = tokens.shape
+    if use_jit_fns is not None:
+        prefill_fn, decode_fn = use_jit_fns
+    else:
+        prefill_fn = jax.jit(lambda p, t, e=None: prefill(
+            cfg, p, t, enc=e, cache_len=s + max_new))
+        decode_fn = jax.jit(lambda p, t, c, i: decode_step(cfg, p, t, c, i))
+
+    args = (params, tokens) + ((enc,) if enc is not None else ())
+    logits, cache = prefill_fn(*args)
+    key = jax.random.PRNGKey(seed)
+    out = []
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    for i in range(max_new):
+        out.append(tok)
+        logits, cache = decode_fn(params, tok, cache, jnp.int32(s + i))
+        if greedy:
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        else:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits[:, -1])[:, None]
+            tok = tok.astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,48 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run lowers
+against these (weak-type-correct, shardable, no device allocation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import init_cache, init_params
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Inputs for the step function selected by ``shape.kind``:
+
+      train    -> {"batch": {tokens, labels[, enc]}}
+      prefill  -> {"tokens"[, "enc"]}
+      decode   -> {"token", "pos", "cache"}   (cache at shape.seq_len)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.compute_dtype)
+    if shape.kind == "train":
+        batch = {"tokens": sds((b, s), jnp.int32),
+                 "labels": sds((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["enc"] = sds((b, cfg.n_frontend_tokens, cfg.d_model), dt)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out = {"tokens": sds((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            out["enc"] = sds((b, cfg.n_frontend_tokens, cfg.d_model), dt)
+        return out
+    if shape.kind == "decode":
+        return {"token": sds((b, 1), jnp.int32),
+                "pos": sds((), jnp.int32),
+                "cache": cache_shapes(cfg, b, s)}
+    raise ValueError(shape.kind)

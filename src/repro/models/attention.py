@@ -1,0 +1,281 @@
+"""Self/cross attention: GQA, sliding window, logit softcap, KV cache.
+
+Full-sequence attention (train/prefill) uses an online-softmax scan over key
+chunks ("flash attention in XLA"): peak memory is O(S * chunk) per head
+instead of O(S^2). On TPU the same tiling is implemented as a Pallas kernel
+(repro/kernels/flash_attention), validated against this path.
+
+Decode attends a single query against a (possibly ring-buffered) KV cache.
+Sliding-window layers use a ring cache of length min(window, seq): writes go
+to slot pos % W and each slot remembers its absolute position (kpos), so
+long_500k decodes with bounded memory on SWA archs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+from repro.models.layers import apply_rope, softcap
+
+NEG_INF = -2.0e38  # large-negative for f32 mask fill
+
+
+# ------------------------------------------------------------- params ------
+
+def init_attn(key: jax.Array, cfg, *, cross: bool = False) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    so = (h * hd) ** -0.5
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "wq": (jax.random.normal(k1, (d, h * hd)) * s).astype(dt),
+        "wk": (jax.random.normal(k2, (d, kv * hd)) * s).astype(dt),
+        "wv": (jax.random.normal(k3, (d, kv * hd)) * s).astype(dt),
+        "wo": (jax.random.normal(k4, (h * hd, d)) * so).astype(dt),
+    }
+
+
+def _split_heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd).transpose(0, 2, 1, 3)   # (B, n, S, hd)
+
+
+# -------------------------------------------------- full-seq attention -----
+
+def _chunk_mask(qpos, pb, s, chunk, causal, window):
+    mask = jnp.broadcast_to(pb[None, :] >= 0, (s, chunk))  # -1 = padding
+    if causal:
+        mask &= qpos[:, None] >= pb[None, :]
+    if window is not None:
+        mask &= (qpos[:, None] - pb[None, :]) < window
+    return mask
+
+
+def _chunked_attention(q, k, v, qpos, kpos, *, window, cap, scale,
+                       causal: bool, chunk: int):
+    """Online-softmax attention with a flash-style custom backward.
+
+    q: (B, H, S, D); k, v: (B, KV, T, D); qpos: (S,), kpos: (T,).
+    Returns (B, H, S, D).
+
+    The forward keeps only the softmax stats (m, l) and the output as
+    residuals; the backward re-computes each chunk's scores and probability
+    tile on the fly (dq accumulates across the chunk scan; dk/dv emit per
+    chunk). Without this, reverse-mode through the chunk scan stashes an
+    O(S·T) probability tensor *and* an O(S·T) mask per layer — the dominant
+    HBM term of every dense train cell (see EXPERIMENTS.md §Perf).
+    """
+    b, h, s, d = q.shape
+    t = k.shape[2]
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    fn = functools.partial(_flash_xla, window=window, cap=cap, scale=scale,
+                           causal=causal, chunk=chunk)
+    return fn(q, k, v, qpos, kpos)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def _flash_xla(q, k, v, qpos, kpos, window, cap, scale, causal, chunk):
+    out, _, _ = _flash_fwd_inner(q, k, v, qpos, kpos, window, cap, scale,
+                                 causal, chunk)
+    return out
+
+
+def _flash_fwd_inner(q, k, v, qpos, kpos, window, cap, scale, causal, chunk):
+    b, h, s, d = q.shape
+    kvh, t = k.shape[1], k.shape[2]
+    rep = h // kvh
+    qg = q.reshape(b, kvh, rep, s, d)
+    nchunk = t // chunk
+    kc = k.reshape(b, kvh, nchunk, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, kvh, nchunk, chunk, d).transpose(2, 0, 1, 3, 4)
+    pc = kpos.reshape(nchunk, chunk)
+
+    # Score/probability tiles live in the compute dtype (bf16 on production
+    # configs); the running max/denominator/accumulator stay float32 —
+    # matching what flash-attention kernels keep in VMEM registers.
+    wd = q.dtype
+    neg = jnp.asarray(NEG_INF, wd)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, pb = xs
+        sc = jnp.einsum("bgrsd,bgcd->bgrsc", qg, kb,
+                        preferred_element_type=wd) * jnp.asarray(scale, wd)
+        sc = softcap(sc, cap)
+        mask = _chunk_mask(qpos, pb, s, chunk, causal, window)
+        sc = jnp.where(mask[None, None, None], sc, neg)
+        m_new = jnp.maximum(m, sc.max(axis=-1).astype(jnp.float32))
+        p = jnp.exp(sc - m_new[..., None].astype(wd))          # wd storage
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1, dtype=jnp.float32)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bgrsc,bgcd->bgrsd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kvh, rep, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, rep, s), jnp.float32)
+    a0 = jnp.zeros((b, kvh, rep, s, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, h, s, d).astype(q.dtype), m, l
+
+
+def _flash_fwd(q, k, v, qpos, kpos, window, cap, scale, causal, chunk):
+    out, m, l = _flash_fwd_inner(q, k, v, qpos, kpos, window, cap, scale,
+                                 causal, chunk)
+    return out, (q, k, v, qpos, kpos, out, m, l)
+
+
+def _flash_bwd(window, cap, scale, causal, chunk, res, dout):
+    q, k, v, qpos, kpos, out, m, l = res
+    b, h, s, d = q.shape
+    kvh, t = k.shape[1], k.shape[2]
+    rep = h // kvh
+    nchunk = t // chunk
+    qg = q.reshape(b, kvh, rep, s, d).astype(jnp.float32)
+    do = dout.reshape(b, kvh, rep, s, d).astype(jnp.float32)
+    og = out.reshape(b, kvh, rep, s, d).astype(jnp.float32)
+    kc = k.reshape(b, kvh, nchunk, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, kvh, nchunk, chunk, d).transpose(2, 0, 1, 3, 4)
+    pc = kpos.reshape(nchunk, chunk)
+    lsafe = jnp.maximum(l, 1e-30)
+    delta = (do * og).sum(-1)                               # (b,kv,rep,s)
+
+    def body(dq, xs):
+        kb, vb, pb = xs
+        sc = jnp.einsum("bgrsd,bgcd->bgrsc", qg,
+                        kb.astype(jnp.float32)) * scale
+        if cap is not None:
+            th = jnp.tanh(sc / cap)
+            sc_capped = cap * th
+        else:
+            th = None
+            sc_capped = sc
+        mask = _chunk_mask(qpos, pb, s, chunk, causal, window)
+        sc_capped = jnp.where(mask[None, None, None], sc_capped, NEG_INF)
+        p = jnp.exp(sc_capped - m[..., None]) / lsafe[..., None]
+        dv = jnp.einsum("bgrsc,bgrsd->bgcd", p, do)
+        dp = jnp.einsum("bgrsd,bgcd->bgrsc", do, vb.astype(jnp.float32))
+        ds = p * (dp - delta[..., None])
+        if th is not None:
+            ds = ds * (1.0 - th * th)                       # through softcap
+        dq = dq + jnp.einsum("bgrsc,bgcd->bgrsd", ds,
+                             kb.astype(jnp.float32)) * scale
+        dk = jnp.einsum("bgrsc,bgrsd->bgcd", ds, qg) * scale
+        return dq, (dk, dv)
+
+    dq0 = jnp.zeros((b, kvh, rep, s, d), jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(body, dq0, (kc, vc, pc))
+    dq = dq.reshape(b, h, s, d).astype(q.dtype)
+    dk = dk.transpose(1, 2, 0, 3, 4).reshape(b, kvh, t, d).astype(k.dtype)
+    dv = dv.transpose(1, 2, 0, 3, 4).reshape(b, kvh, t, d).astype(v.dtype)
+    return dq, dk, dv, None, None
+
+
+_flash_xla.defvjp(_flash_fwd, _flash_bwd)
+
+
+def self_attention(cfg, p: dict, x: jax.Array, *, window: Optional[int],
+                   positions: jax.Array, chunk: int = 1024) -> jax.Array:
+    """Full-sequence causal self-attention. x: (B, S, d)."""
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _split_heads(x @ p["wq"], h, hd)
+    k = _split_heads(x @ p["wk"], kv, hd)
+    v = _split_heads(x @ p["wv"], kv, hd)
+    q = apply_rope(q, positions[None, None, :], cfg.rope_theta)
+    k = apply_rope(k, positions[None, None, :], cfg.rope_theta)
+    q = constrain(q, "dp", "model", None, None)
+    k = constrain(k, "dp", "model", None, None)
+    scale = cfg.attn_scale or hd ** -0.5
+    out = _chunked_attention(q, k, v, positions, positions,
+                             window=window, cap=cfg.attn_logit_softcap,
+                             scale=scale, causal=True, chunk=chunk)
+    b, s, _ = x.shape
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return out @ p["wo"], (k, v)
+
+
+def cross_attention(cfg, p: dict, x: jax.Array, enc_kv=None,
+                    enc: Optional[jax.Array] = None) -> jax.Array:
+    """Cross-attention over frontend embeddings. x: (B,S,d); enc: (B,T,d)."""
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b, s, _ = x.shape
+    q = _split_heads(x @ p["wq"], h, hd)
+    if enc_kv is None:
+        k = _split_heads(enc @ p["wk"], kvh, hd)
+        v = _split_heads(enc @ p["wv"], kvh, hd)
+    else:
+        k, v = enc_kv
+    t = k.shape[2]
+    scale = cfg.attn_scale or hd ** -0.5
+    # pad encoder K/V to a chunk multiple; padded slots get kpos=-1 and are
+    # masked inside the online-softmax scan. The cache keeps the unpadded
+    # K/V (decode re-pads).
+    chunk = min(1024, t)
+    padn = (-t) % chunk
+    kp, vp = k, v
+    if padn:
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, padn), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, padn), (0, 0)))
+    qpos = jnp.zeros((s,), jnp.int32)
+    kpos = jnp.concatenate([jnp.zeros((t,), jnp.int32),
+                            jnp.full((padn,), -1, jnp.int32)])
+    out = _chunked_attention(q, kp, vp, qpos, kpos, window=None,
+                             cap=cfg.attn_logit_softcap, scale=scale,
+                             causal=False, chunk=chunk)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return out @ p["wo"], (k, v)
+
+
+# ------------------------------------------------------------- decode ------
+
+def decode_attention(cfg, p: dict, x: jax.Array, cache: dict, pos: jax.Array,
+                     *, window: Optional[int]) -> tuple[jax.Array, dict]:
+    """Single-token decode. x: (B, 1, d); cache: {k, v: (B,KV,W,hd),
+    kpos: (W,) int32 (absolute position per slot, -1 = empty)}."""
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b = x.shape[0]
+    w = cache["k"].shape[2]
+    q = _split_heads(x @ p["wq"], h, hd)
+    k_new = _split_heads(x @ p["wk"], kvh, hd)
+    v_new = _split_heads(x @ p["wv"], kvh, hd)
+    ppos = jnp.full((1,), 0, jnp.int32) + pos
+    q = apply_rope(q, ppos[None, None, :], cfg.rope_theta)
+    k_new = apply_rope(k_new, ppos[None, None, :], cfg.rope_theta)
+
+    slot = (pos % w).astype(jnp.int32)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, 0, slot, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, 0, slot, 0))
+    kpos = jax.lax.dynamic_update_slice(cache["kpos"],
+                                        ppos.astype(jnp.int32), (slot,))
+
+    rep = h // kvh
+    qg = q.reshape(b, kvh, rep, hd)
+    sc = jnp.einsum("bgrd,bgtd->bgrt", qg, k,
+                    preferred_element_type=jnp.float32)
+    sc = sc * (cfg.attn_scale or hd ** -0.5)
+    sc = softcap(sc, cfg.attn_logit_softcap)
+    valid = (kpos >= 0) & (kpos <= pos)
+    if window is not None:
+        valid &= (pos - kpos) < window
+    sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bgrt,bgtd->bgrd", pr.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h * hd).astype(x.dtype)
+    return out @ p["wo"], {"k": k, "v": v, "kpos": kpos}
+
+
+def decode_cross_attention(cfg, p: dict, x: jax.Array, cache: dict):
+    """Cross-attn during decode: static encoder KV from prefill cache."""
+    out, _ = cross_attention(cfg, p, x, enc_kv=(cache["k"], cache["v"]))
+    return out, cache

@@ -1,0 +1,73 @@
+"""KV/state cache construction. Cache pytree mirrors the stack plan:
+{"groups": [{"blocks": [cache_or_None per block]}]}. Blocks of kind
+"nbl"/"drop" carry NO cache — NBL's KV-cache saving (paper §4.2) is
+structural, and shows up directly in the dry-run memory analysis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import Block, ModelConfig
+
+
+def _attn_cache_len(cfg: ModelConfig, blk: Block, max_len: int) -> int:
+    if blk.window is not None:
+        return min(blk.window, max_len)
+    return max_len
+
+
+def _block_cache(cfg: ModelConfig, blk: Block, batch: int, max_len: int,
+                 stack: int, dtype):
+    """Returns a cache pytree for one block (leading `stack` dim if > 0)."""
+    def shp(*s):
+        return (stack, *s) if stack else s
+
+    if blk.kind == "attn":
+        w = _attn_cache_len(cfg, blk, max_len)
+        kv, hd = cfg.n_kv_heads, cfg.head_dim
+        return {
+            "k": jnp.zeros(shp(batch, kv, w, hd), dtype),
+            "v": jnp.zeros(shp(batch, kv, w, hd), dtype),
+            "kpos": jnp.full(shp(w), -1, jnp.int32),
+        }
+    if blk.kind == "cross_attn":
+        kv, hd = cfg.n_kv_heads, cfg.head_dim
+        t = cfg.n_frontend_tokens
+        return {
+            "k": jnp.zeros(shp(batch, kv, t, hd), dtype),
+            "v": jnp.zeros(shp(batch, kv, t, hd), dtype),
+        }
+    if blk.kind == "mamba":
+        s = cfg.ssm
+        di = s.d_inner(cfg.d_model)
+        h = s.n_heads(cfg.d_model)
+        return {
+            "ssm": jnp.zeros(shp(batch, h, s.head_dim, s.d_state),
+                             jnp.float32),
+            "conv": jnp.zeros(shp(batch, s.conv_kernel - 1, di + 2 * s.d_state),
+                              dtype),
+        }
+    return None  # nbl / drop: no cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    groups = []
+    for g in cfg.stack:
+        blocks = []
+        for blk in g.unit:
+            stack = 0 if blk.shared else g.repeat
+            # shared blocks still need one cache per *invocation*
+            stack = g.repeat if blk.shared else stack
+            blocks.append(_block_cache(cfg, blk, batch, max_len, stack, dtype))
+        groups.append({"blocks": blocks})
+    return {"groups": groups}
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, max_len: int) -> int:
+    """Analytic KV/state cache size (paper Table 21 benchmark)."""
+    cache = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(cache))

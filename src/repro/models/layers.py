@@ -1,0 +1,65 @@
+"""Primitive layers: RMSNorm, RoPE, gated MLPs, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------- RoPE -----
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, head_dim); positions: broadcastable to (..., S)."""
+    freqs = rope_freqs(x.shape[-1], theta)                     # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- MLP ------
+
+def init_mlp(key: jax.Array, d: int, ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, ff ** -0.5
+    return {
+        "w_gate": (jax.random.normal(k1, (d, ff)) * s_in).astype(dtype),
+        "w_up":   (jax.random.normal(k2, (d, ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (ff, d)) * s_out).astype(dtype),
+    }
+
+
+def mlp(p: dict, x: jax.Array, act: str) -> jax.Array:
+    """Gated MLP: silu (Llama/SwiGLU) or geglu (Gemma)."""
+    g = x @ p["w_gate"]
+    u = x @ p["w_up"]
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+    h = constrain(g * u, "dp", None, "model")
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------- misc -----
+
+def softcap(logits: jax.Array, cap) -> jax.Array:
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def embed_tokens(table: jax.Array, tokens: jax.Array, dtype) -> jax.Array:
+    x = jnp.take(table, tokens, axis=0).astype(dtype)
+    return constrain(x, "dp", None, None)

@@ -1,0 +1,198 @@
+"""Mamba2 (SSD, state-space duality) block: chunked training/prefill scan and
+O(1)-state decode step.
+
+Training/prefill uses the chunked SSD algorithm (Dao & Gu 2024, §6): within a
+chunk the recurrence is computed in quadratic "attention form" (MXU-friendly
+(c x c) matmuls), across chunks a short recurrence carries the (h, p, n)
+state. Peak memory O(n_chunks * h * p * n) instead of O(seq * h * p * n).
+
+Decode keeps per-layer state (B, h, p, n) plus a (k-1)-deep conv ring.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+from repro.models.layers import rmsnorm
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    h = s.n_heads(cfg.d_model)
+    return s, di, h, s.head_dim, s.d_state
+
+
+def init_mamba(key: jax.Array, cfg) -> dict:
+    s, di, h, p_, n = _dims(cfg)
+    d = cfg.d_model
+    conv_ch = di + 2 * n
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    # in_proj -> [z(di), x(di), B(n), C(n), dt(h)]
+    return {
+        "in_proj": (jax.random.normal(k1, (d, 2 * di + 2 * n + h))
+                    * d ** -0.5).astype(dt),
+        "conv_w": (jax.random.normal(k2, (s.conv_kernel, conv_ch))
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),  # softplus^-1(~0.12)
+        "norm_w": jnp.zeros((di,), dt),
+        "out_proj": (jax.random.normal(k3, (di, d)) * di ** -0.5).astype(dt),
+    }
+
+
+def _segsum(a):
+    """a: (..., c). Returns (..., c, c) with L[i, j] = sum_{j<k<=i} a_k for
+    i >= j, -inf otherwise (lower-triangular cumulative decay)."""
+    c = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _ssd_chunked(xh, a, B, C, chunk, work_dtype=jnp.float32):
+    """Chunked SSD scan.
+
+    xh: (b, l, h, p)   dt-weighted inputs (dt * x)
+    a:  (b, l, h)      per-step log-decay (dt * A, negative)
+    B, C: (b, l, n)    shared across heads (single group)
+    Returns y: (b, l, h, p), final_state: (b, h, p, n).
+
+    ``work_dtype`` controls the *materialized* intermediates (the decay
+    tensor L (b,nc,h,c,c), the dispatch products, the per-chunk states).
+    bf16 halves the dominant HBM traffic of the layer; log-decay sums,
+    einsum accumulation and the inter-chunk state stay float32 (decays are
+    in [0,1], so bf16's 8 mantissa bits cost ~3 decimal digits on values
+    whose gradients are already noise-dominated — validated vs the f32
+    path in tests).
+    """
+    b, l, h, p = xh.shape
+    n = B.shape[-1]
+    c = min(chunk, l)
+    assert l % c == 0, (l, c)
+    nc = l // c
+    wd = work_dtype
+
+    xc = xh.reshape(b, nc, c, h, p).astype(wd)
+    ac = a.reshape(b, nc, c, h).transpose(0, 1, 3, 2)      # (b,nc,h,c) f32
+    Bc = B.reshape(b, nc, c, n).astype(wd)
+    Cc = C.reshape(b, nc, c, n).astype(wd)
+
+    L = jnp.exp(_segsum(ac)).astype(wd)                    # (b,nc,h,c,c)
+    # intra-chunk (attention form): y_intra[i] = sum_j (C_i.B_j) L_ij x_j
+    cb = jnp.einsum("bzin,bzjn->bzij", Cc, Bc,
+                    preferred_element_type=wd)             # (b,nc,c,c)
+    y_intra = jnp.einsum("bzij,bzhij,bzjhp->bzihp", cb, L, xc,
+                         preferred_element_type=jnp.float32)
+
+    # chunk states: S_z = sum_j exp(sum_{k>j} a_k) B_j (x) x_j
+    a_cum = jnp.cumsum(ac, axis=-1)                        # (b,nc,h,c) f32
+    a_tot = a_cum[..., -1]                                 # (b,nc,h)
+    decay_state = jnp.exp(a_tot[..., None] - a_cum).astype(wd)
+    S = jnp.einsum("bzhj,bzjn,bzjhp->bzhpn", decay_state, Bc, xc,
+                   preferred_element_type=jnp.float32)
+
+    # inter-chunk recurrence over nc (sequential scan, nc is small)
+    def body(carry, xs):
+        s_prev = carry
+        s_z, atot_z = xs
+        s_new = s_prev * jnp.exp(atot_z)[..., None, None] + s_z
+        return s_new, s_prev.astype(wd)
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    S_t = S.transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    atot_t = a_tot.transpose(1, 0, 2)
+    final_state, s_prevs = jax.lax.scan(body, s0, (S_t, atot_t))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)             # (b,nc,h,p,n)
+
+    # inter-chunk output: y_inter[i] = C_i . (exp(cumsum a) * S_prev)
+    decay_out = jnp.exp(a_cum).astype(wd)                  # (b,nc,h,c)
+    y_inter = jnp.einsum("bzin,bzhpn,bzhi->bzihp",
+                         Cc, s_prevs, decay_out,
+                         preferred_element_type=jnp.float32)
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y, final_state
+
+
+def _in_proj_split(cfg, p, x):
+    s, di, h, p_, n = _dims(cfg)
+    z, xr, B, C, dt = jnp.split(
+        x @ p["in_proj"], [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    return z, xr, B, C, dt
+
+
+def mamba_block(cfg, p: dict, x: jax.Array) -> tuple[jax.Array, tuple]:
+    """Full-sequence Mamba2. x: (B, S, d) -> (y, (ssm_state, conv_state))."""
+    s, di, h, hp, n = _dims(cfg)
+    b, l, d = x.shape
+    z, xr, B, C, dt = _in_proj_split(cfg, p, x)
+
+    conv_in = jnp.concatenate([xr, B, C], axis=-1)         # (b,l,conv_ch)
+    k = s.conv_kernel
+    pad = jnp.pad(conv_in, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + l] * p["conv_w"][i] for i in range(k))
+    conv = jax.nn.silu(conv + p["conv_b"])
+    xr, B, C = jnp.split(conv, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (b,l,h)
+    A = -jnp.exp(p["A_log"])                                      # (h,)
+    xh = xr.reshape(b, l, h, hp)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+    a = dt * A                                                    # (b,l,h)
+
+    # pad the token dim to a chunk multiple: zero input + zero log-decay
+    # makes padded steps exact identities on the state.
+    padn = (-l) % min(s.chunk, max(l, 1))
+    xdt32, a32 = xdt.astype(jnp.float32), a.astype(jnp.float32)
+    B32, C32 = B.astype(jnp.float32), C.astype(jnp.float32)
+    if padn:
+        zpad = ((0, 0), (0, padn), (0, 0), (0, 0))
+        xdt32 = jnp.pad(xdt32, zpad)
+        a32 = jnp.pad(a32, ((0, 0), (0, padn), (0, 0)))
+        B32 = jnp.pad(B32, ((0, 0), (0, padn), (0, 0)))
+        C32 = jnp.pad(C32, ((0, 0), (0, padn), (0, 0)))
+    y, state = _ssd_chunked(xdt32, a32, B32, C32, s.chunk,
+                            work_dtype=jnp.dtype(cfg.compute_dtype))
+    y = y[:, :l]
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, l, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps)
+    y = constrain(y, "dp", None, "model")
+    conv_state = pad[:, l:l + k - 1]                       # last k-1 inputs
+    return y @ p["out_proj"], (state, conv_state.astype(x.dtype))
+
+
+def mamba_decode(cfg, p: dict, x: jax.Array, cache: dict
+                 ) -> tuple[jax.Array, dict]:
+    """Single-token decode. x: (B, 1, d); cache: {ssm: (B,h,p,n) f32,
+    conv: (B, k-1, conv_ch)}."""
+    s, di, h, hp, n = _dims(cfg)
+    b = x.shape[0]
+    k = s.conv_kernel
+    z, xr, B, C, dt = _in_proj_split(cfg, p, x)
+    conv_in = jnp.concatenate([xr, B, C], axis=-1)[:, 0]   # (b, conv_ch)
+
+    hist = jnp.concatenate([cache["conv"], conv_in[:, None]], axis=1)  # (b,k,ch)
+    conv = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    conv = jax.nn.silu(conv)
+    xr1, B1, C1 = jnp.split(conv, [di, di + n], axis=-1)
+
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (b,h)
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt1 * A)                                  # (b,h)
+    xh = xr1.reshape(b, h, hp).astype(jnp.float32)
+    upd = jnp.einsum("bhp,bn->bhpn", xh * dt1[..., None], B1.astype(jnp.float32))
+    state = cache["ssm"] * da[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, C1.astype(jnp.float32))
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, {"ssm": state, "conv": hist[:, 1:].astype(cache["conv"].dtype)}

@@ -1,0 +1,5 @@
+from repro.optim.adamw import adamw_init, adamw_update, global_norm_clip  # noqa: F401
+from repro.optim.schedules import cosine_schedule, wsd_schedule, get_schedule  # noqa: F401
+from repro.optim.compression import (  # noqa: F401
+    ef_init, quantize_int8, dequantize_int8, compressed_psum,
+)

@@ -1,0 +1,70 @@
+"""AdamW with global-norm clipping.
+
+Implemented directly in JAX (no optax in this environment). ZeRO-1 moment
+sharding is applied at the jit boundary (distributed.sharding.zero1_specs):
+the Adam moments' in/out shardings add the DP axes on top of the weight's
+own spec, so each DP replica holds 1/|dp| of the optimizer state and the
+update math runs sharded. For a 1T-param model (kimi-k2) this is the
+difference between ~8 GB and ~125 GB of optimizer state per chip.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params, *, zero1: bool = True) -> dict:
+    del zero1                       # sharding handled via zero1_specs
+    def mom(p):
+        return jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "mu": jax.tree.map(mom, params),
+        "nu": jax.tree.map(mom, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm_clip(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def adamw_update(grads, state: dict, params, *, lr, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 max_grad_norm: Optional[float] = 1.0,
+                 zero1: bool = True):
+    """Returns (new_params, new_state, metrics)."""
+    if max_grad_norm is not None:
+        grads, gn = global_norm_clip(grads, max_grad_norm)
+    else:
+        gn = jnp.zeros(())
+    count = state["count"] + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g32
+        nu = b2 * nu + (1 - b2) * g32 * g32
+        step = (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, mu, nu
+
+    flat, treedef = jax.tree.flatten(params)
+    gflat = treedef.flatten_up_to(grads)
+    muflat = treedef.flatten_up_to(state["mu"])
+    nuflat = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat, gflat, muflat, nuflat)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_state = {
+        "mu": jax.tree.unflatten(treedef, [o[1] for o in out]),
+        "nu": jax.tree.unflatten(treedef, [o[2] for o in out]),
+        "count": count,
+    }
+    return new_params, new_state, {"grad_norm": gn}

@@ -1,0 +1,42 @@
+"""LR schedules: cosine (default) and WSD (warmup-stable-decay, MiniCPM —
+the schedule its config card calls for)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5
+                         * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def wsd_schedule(peak_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, floor: float = 0.1):
+    """Warmup → stable plateau → linear decay over the last decay_frac."""
+    decay_start = int(total * (1 - decay_frac))
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - decay_start)
+                        / jnp.maximum(total - decay_start, 1), 0.0, 1.0)
+        dec = peak_lr * (1 - (1 - floor) * frac)
+        out = jnp.where(step < warmup, warm, peak_lr)
+        return jnp.where(step >= decay_start, dec, out)
+    return lr
+
+
+def get_schedule(name: str, peak_lr: float, warmup: int, total: int):
+    if name == "cosine":
+        return cosine_schedule(peak_lr, warmup, total)
+    if name == "wsd":
+        return wsd_schedule(peak_lr, warmup, total)
+    raise ValueError(name)

@@ -1,0 +1,3 @@
+from repro.quant.awq import (  # noqa: F401
+    awq_scale_search, dequantize, quantize_model, quantize_tensor,
+)

@@ -1,0 +1,142 @@
+"""Activation-aware weight quantization (AWQ, Lin et al. 2024) — the
+post-training quantization the paper composes with NBL at 70B (§4.3,
+App. E.6).
+
+Weight-only symmetric int-N with per-output-channel, per-group scales.
+The AWQ trick: scale salient input channels up before rounding
+(w' = w·diag(s), x' = x/s) so their relative rounding error shrinks;
+s_c = E|x_c|^α with α grid-searched per tensor against the *true expected
+output error*  E‖(Ŵ−W)x‖² = Tr((Ŵ−W) C_xx (Ŵ−W)ᵀ) — we already have C_xx
+from the NBL calibration moments, so AWQ here reuses the same single
+calibration pass (the "deeper algorithmic integration" the paper's §5
+anticipates).
+
+Quantization is simulated (quantize→dequantize in the stored dtype), the
+standard PTQ evaluation practice; byte savings are reported analytically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+# weight leaves eligible for PTQ (big matmuls only; norms/bias/router stay)
+_QUANT_NAMES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+                "in_proj", "out_proj", "embed", "head", "w")
+
+
+def quantize_tensor(w: np.ndarray, bits: int = 4, group: int = 128,
+                    s: Optional[np.ndarray] = None
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Symmetric int-N along the LAST axis in groups. w: (..., d_in).
+    ``s``: optional per-input-channel AWQ scale (d_in,). Returns
+    (q int8-stored, scales) with dequant = (q · scales) / s."""
+    wd = w.astype(np.float64)
+    if s is not None:
+        wd = wd * s                              # scale salient channels up
+    d_in = wd.shape[-1]
+    g = min(group, d_in)
+    pad = (-d_in) % g
+    if pad:
+        wd = np.concatenate([wd, np.zeros((*wd.shape[:-1], pad))], -1)
+    gshape = (*wd.shape[:-1], wd.shape[-1] // g, g)
+    wg = wd.reshape(gshape)
+    qmax = 2 ** (bits - 1) - 1
+    scales = np.abs(wg).max(-1, keepdims=True) / qmax
+    scales = np.maximum(scales, 1e-12)
+    q = np.clip(np.round(wg / scales), -qmax - 1, qmax).astype(np.int8)
+    return q, scales
+
+
+def dequantize(q: np.ndarray, scales: np.ndarray, d_in: int,
+               s: Optional[np.ndarray] = None) -> np.ndarray:
+    w = (q.astype(np.float64) * scales).reshape(*q.shape[:-2], -1)[..., :d_in]
+    if s is not None:
+        w = w / s
+    return w
+
+
+def _expected_err(w: np.ndarray, w_hat: np.ndarray,
+                  cxx_diag: Optional[np.ndarray]) -> float:
+    """E‖(Ŵ−W)x‖² with diagonal C_xx approx (exact for the α ranking)."""
+    d = w_hat - w
+    if cxx_diag is None:
+        return float((d * d).sum())
+    return float((d * d * cxx_diag.reshape((1,) * (d.ndim - 1) + (-1,)))
+                 .sum())
+
+
+def awq_scale_search(w: np.ndarray, act_mag: Optional[np.ndarray], *,
+                     bits: int = 4, group: int = 128,
+                     alphas=(0.0, 0.25, 0.5, 0.75, 1.0)
+                     ) -> tuple[np.ndarray, float, float]:
+    """Grid-search α for s = act_mag^α. Returns (best_w_hat, α*, err)."""
+    cxx_diag = None if act_mag is None else act_mag ** 2
+    best = (None, 0.0, np.inf)
+    cand = alphas if act_mag is not None else (0.0,)
+    for a in cand:
+        s = None
+        if act_mag is not None and a > 0:
+            s = np.maximum(act_mag, 1e-8) ** a
+            s = s / s.mean()                     # keep overall magnitude
+        q, scales = quantize_tensor(w, bits, group, s)
+        w_hat = dequantize(q, scales, w.shape[-1], s)
+        err = _expected_err(w, w_hat, cxx_diag)
+        if err < best[2]:
+            best = (w_hat, a, err)
+    return best
+
+
+@dataclasses.dataclass
+class QuantReport:
+    bits: int
+    n_quantized: int
+    fp_bytes: int
+    q_bytes: int
+    alphas: dict
+    mean_rel_err: float
+
+    def summary(self) -> str:
+        return (f"AWQ int{self.bits}: {self.n_quantized} tensors, "
+                f"{self.fp_bytes / 2**20:.1f} MiB -> "
+                f"{self.q_bytes / 2**20:.1f} MiB "
+                f"({self.fp_bytes / max(self.q_bytes, 1):.2f}x), "
+                f"mean rel err {self.mean_rel_err:.4f}")
+
+
+def quantize_model(cfg: ModelConfig, params: dict, *, bits: int = 4,
+                   group: int = 128,
+                   act_mags: Optional[dict] = None) -> tuple[dict, QuantReport]:
+    """Simulated AWQ over all eligible weight leaves. ``act_mags`` maps a
+    leaf path-string to E|x| per input channel (from calibration moments;
+    None → plain round-to-nearest groupwise, the RTN baseline)."""
+    paths, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out, alphas, errs = [], {}, []
+    n_q = fp_b = q_b = 0
+    for path, leaf in paths:
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = names[-1]
+        key = "/".join(names)
+        arr = np.asarray(leaf)
+        if name in _QUANT_NAMES and arr.ndim >= 2 and arr.shape[-1] >= 32:
+            mag = None if act_mags is None else act_mags.get(key)
+            w_hat, a, err = awq_scale_search(arr, mag, bits=bits,
+                                             group=group)
+            alphas[key] = a
+            denom = float((arr.astype(np.float64) ** 2).sum()) or 1.0
+            errs.append(err / denom if mag is None else
+                        float(((w_hat - arr) ** 2).sum()) / denom)
+            n_q += 1
+            fp_b += arr.size * arr.dtype.itemsize
+            q_b += arr.size * bits // 8 + (arr.size // group) * 2
+            out.append(jax.numpy.asarray(w_hat, leaf.dtype))
+        else:
+            out.append(leaf)
+    rep = QuantReport(bits=bits, n_quantized=n_q, fp_bytes=fp_b,
+                      q_bytes=q_b, alphas=alphas,
+                      mean_rel_err=float(np.mean(errs)) if errs else 0.0)
+    return jax.tree_util.tree_unflatten(treedef, out), rep

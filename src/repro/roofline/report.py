@@ -1,0 +1,82 @@
+"""Render the §Roofline markdown table from dry-run JSON records.
+
+    PYTHONPATH=src python -m repro.roofline.report experiments/*.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}µs"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def rows_from(records: list[dict]) -> list[dict]:
+    out = []
+    for r in records:
+        if r.get("status") == "skipped":
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "mesh": r["mesh"], "skip": r["reason"]})
+            continue
+        if r.get("status") != "ok":
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "mesh": r["mesh"], "skip": "FAIL " + r.get("error", "")})
+            continue
+        rf = r["roofline"]
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "nbl_m": r.get("nbl_m", 0),
+            "t_c": rf["t_compute"], "t_m": rf["t_memory"],
+            "t_x": rf["t_collective"], "dom": rf["dominant"],
+            "frac": rf.get("frac_compute", 0.0),
+            "useful": rf.get("useful_flop_ratio", 0.0),
+            "flops": rf["hlo_flops"], "bytes": rf["hlo_bytes"],
+            "coll": rf["collectives"]["total"],
+            "mem": r.get("memory", {}),
+        })
+    return out
+
+
+def markdown(rows: list[dict], mesh: str | None = "16x16") -> str:
+    hdr = ("| arch | shape | t_compute | t_memory | t_collective | dominant "
+           "| compute-frac | 6ND/HLO |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if mesh and r["mesh"] != mesh:
+            continue
+        if "skip" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['t_c'])} "
+            f"| {fmt_s(r['t_m'])} | {fmt_s(r['t_x'])} "
+            f"| {r['dom'].replace('t_', '')} | {r['frac']:.3f} "
+            f"| {r['useful']:.2f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    records = []
+    for path in sys.argv[1:]:
+        with open(path) as f:
+            records.extend(json.load(f))
+    # dedupe on (arch, shape, mesh, nbl) keeping the LAST occurrence
+    seen = {}
+    for r in records:
+        seen[(r["arch"], r["shape"], r["mesh"], r.get("nbl_m", 0))] = r
+    rows = rows_from(list(seen.values()))
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n### mesh {mesh}\n")
+        print(markdown(rows, mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the real
+single CPU device; multi-device tests spawn subprocesses (run_py)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_py(code: str, n_devices: int = 1, timeout: int = 560) -> str:
+    """Run ``code`` in a fresh python with n host-platform devices."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    if n_devices > 1:
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + f" --xla_force_host_platform_device_count={n_devices}")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if out.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}")
+    return out.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_py

@@ -1,0 +1,120 @@
+"""Pallas kernel sweeps: shapes × dtypes × features vs pure-jnp oracles
+(interpret mode on CPU; same call sites compile to Mosaic on TPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.cov_accum import cov_accum
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.nbl_linear import nbl_linear
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("b,h,kv,s,t,d", [
+    (1, 4, 2, 128, 128, 64),
+    (2, 4, 4, 256, 256, 32),
+    (1, 8, 1, 128, 256, 64),     # MQA, cross-length
+])
+@pytest.mark.parametrize("window,cap", [(None, None), (64, None),
+                                        (None, 30.0)])
+def test_flash_attention_sweep(b, h, kv, s, t, d, window, cap):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (b, h, s, d), jnp.float32)
+    k = jax.random.normal(k2, (b, kv, t, d), jnp.float32)
+    v = jax.random.normal(k3, (b, kv, t, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window, softcap=cap,
+                          block_q=128, block_k=128, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window,
+                                   softcap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q = jax.random.normal(KEY, (1, 2, 128, 64)).astype(dtype)
+    k = jax.random.normal(KEY, (1, 2, 128, 64)).astype(dtype)
+    v = jax.random.normal(KEY, (1, 2, 128, 64)).astype(dtype)
+    out = flash_attention(q, k, v, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    tol = 1e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_padded_wrapper():
+    """ops.attention pads seq/head_dim to block multiples transparently."""
+    q = jax.random.normal(KEY, (1, 4, 100, 48))
+    k = jax.random.normal(KEY, (1, 2, 100, 48))
+    v = jax.random.normal(KEY, (1, 2, 100, 48))
+    out = ops.attention(q, k, v, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("m,k,n,residual", [
+    (256, 256, 256, True), (512, 512, 512, True), (256, 512, 256, False),
+    (512, 256, 512, False),
+])
+def test_nbl_linear_sweep(m, k, n, residual):
+    x = jax.random.normal(KEY, (m, k))
+    w = jax.random.normal(KEY, (k, n)) * 0.05
+    b = jax.random.normal(KEY, (n,))
+    if residual and k != n:
+        pytest.skip("residual needs square W")
+    out = nbl_linear(x, w, b, residual=residual, interpret=True)
+    want = ref.nbl_linear_ref(x, w, b, residual=residual)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_nbl_linear_dtype(dtype):
+    x = jax.random.normal(KEY, (256, 256)).astype(dtype)
+    w = (jax.random.normal(KEY, (256, 256)) * 0.05).astype(dtype)
+    b = jnp.zeros((256,), dtype)
+    out = nbl_linear(x, w, b, interpret=True)
+    want = ref.nbl_linear_ref(x, w, b)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("t,dx,dy", [(512, 256, 256), (1024, 256, 512),
+                                     (512, 512, 256)])
+def test_cov_accum_sweep(t, dx, dy):
+    x = jax.random.normal(KEY, (t, dx))
+    y = jax.random.normal(jax.random.PRNGKey(1), (t, dy))
+    acc = jnp.ones((dy, dx))
+    out = cov_accum(acc, x, y, interpret=True)
+    want = ref.cov_accum_ref(acc, x, y)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-3, rtol=1e-4)
+
+
+def test_cov_accum_is_running_sum():
+    x = jax.random.normal(KEY, (512, 256))
+    acc = jnp.zeros((256, 256))
+    a1 = cov_accum(acc, x[:256].copy(), interpret=True)
+    a2 = cov_accum(a1, x[256:].copy(), interpret=True)
+    want = ref.cov_accum_ref(acc, x)
+    np.testing.assert_allclose(np.asarray(a2), np.asarray(want),
+                               atol=2e-3, rtol=1e-4)
+
+
+def test_nbl_wrapper_3d():
+    x = jax.random.normal(KEY, (2, 100, 256))
+    w = jax.random.normal(KEY, (256, 256)) * 0.05
+    b = jnp.zeros((256,))
+    out = ops.nbl_apply(x, w, b, interpret=True)
+    want = ref.nbl_linear_ref(x.reshape(-1, 256), w, b).reshape(x.shape)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)

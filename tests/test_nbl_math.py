@@ -1,0 +1,112 @@
+"""Property tests for the paper's math: Proposition 3.1 (LMMSE optimality)
+and Theorem 3.2 (CCA NMSE bound)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cca import (canonical_correlations, inv_sqrt_psd, nmse_bound,
+                            cca_bound_from_moments)
+from repro.core.lmmse import lmmse_from_moments, lmmse_mse
+from repro.core.moments import finalize, init_moments, update_moments
+
+
+def _moments_for(x: np.ndarray, y: np.ndarray):
+    mom = init_moments(x.shape[1], y.shape[1])
+    mom = update_moments(mom, x, y)
+    return finalize(mom)
+
+
+def _rand_xy(seed: int, n: int, d_in: int, d_out: int, noise: float,
+             nonlin: bool = False):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d_in)).astype(np.float64)
+    a = rng.standard_normal((d_in, d_out)) / np.sqrt(d_in)
+    y = x @ a + noise * rng.standard_normal((n, d_out))
+    if nonlin:
+        y = np.tanh(y) + 0.3 * y
+    return x, y
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), d=st.sampled_from([3, 5, 8, 16]),
+       noise=st.floats(0.0, 2.0), nonlin=st.booleans())
+def test_theorem_3_2_bound_holds(seed, d, noise, nonlin):
+    """Achieved NMSE of the LMMSE estimator never exceeds the CCA bound."""
+    x, y = _rand_xy(seed, 400 + 20 * d, d, d, noise, nonlin)
+    fin = _moments_for(x, y - x)          # treat y as residual output y₊
+    w, b = lmmse_from_moments(fin, ridge=1e-9)
+    # direct NMSE of ŷ₊ = x + Wx + b against y
+    yhat = x + x @ w.T + b
+    nmse = float(np.mean(np.sum((y - yhat) ** 2, -1))
+                 / np.mean(np.sum((y - y.mean(0)) ** 2, -1)))
+    bound, rho = cca_bound_from_moments(fin)
+    assert np.all(rho >= 0) and np.all(rho <= 1)
+    assert nmse <= bound * (1 + 1e-6) + 1e-8, (nmse, bound)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), d=st.sampled_from([4, 8]),
+       noise=st.floats(0.0, 1.0))
+def test_lmmse_optimality(seed, d, noise):
+    """Prop 3.1: any perturbation of (W, b) increases the empirical MSE."""
+    x, y = _rand_xy(seed, 600, d, d, noise)
+    fin = _moments_for(x, y)
+    w, b = lmmse_from_moments(fin, ridge=1e-10)
+
+    def mse(wm, bm):
+        return float(np.mean(np.sum((y - (x @ wm.T + bm)) ** 2, -1)))
+
+    base = mse(w, b)
+    rng = np.random.default_rng(seed + 1)
+    for scale in (1e-2, 1e-1):
+        dw = rng.standard_normal(w.shape) * scale
+        db = rng.standard_normal(b.shape) * scale
+        assert mse(w + dw, b + db) >= base - 1e-9
+
+
+def test_exact_linear_recovery():
+    """If Y is exactly affine in X, NBL recovers it and the bound ≈ 0."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((2000, 12))
+    a = rng.standard_normal((12, 12))
+    c = rng.standard_normal(12)
+    y = x @ a + c
+    fin = _moments_for(x, y)
+    w, b = lmmse_from_moments(fin, ridge=1e-12)
+    np.testing.assert_allclose(w, a.T, atol=1e-4)
+    np.testing.assert_allclose(b, c, atol=1e-4)
+    # y₊ = y + x is also exactly affine -> all canonical correlations 1
+    bound, rho = cca_bound_from_moments(fin)
+    assert bound < 1e-4, bound
+
+
+def test_inv_sqrt_psd():
+    rng = np.random.default_rng(3)
+    m = rng.standard_normal((6, 6))
+    c = m @ m.T + 0.1 * np.eye(6)
+    s = inv_sqrt_psd(c, eps=1e-12)
+    np.testing.assert_allclose(s @ c @ s, np.eye(6), atol=1e-8)
+
+
+def test_nmse_bound_underdetermined_term():
+    # h_out > h_in adds (h_out - r)
+    rho = np.array([1.0, 1.0])
+    assert nmse_bound(rho, h_out=5, h_in=2) == pytest.approx(3.0)
+    assert nmse_bound(rho, h_out=2, h_in=2) == pytest.approx(0.0)
+
+
+def test_streaming_equals_batch_moments():
+    """Accumulating in chunks == one-shot (the distributed-merge property)."""
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((512, 8)).astype(np.float32)
+    y = rng.standard_normal((512, 8)).astype(np.float32)
+    one = init_moments(8, 8)
+    one = update_moments(one, x, y)
+    two = init_moments(8, 8)
+    for i in range(0, 512, 128):
+        two = update_moments(two, x[i:i + 128], y[i:i + 128])
+    fa, fb = finalize(one), finalize(two)
+    for k in ("cxx", "cyx", "cypyp", "ex", "ey"):
+        np.testing.assert_allclose(fa[k], fb[k], atol=1e-3)

@@ -1,0 +1,87 @@
+"""Roofline machinery: HLO parsing with trip counts, term arithmetic."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import (HW_V5E, collective_bytes, model_flops,
+                                     roofline_terms)
+from repro.roofline.hlo import analyze, parse_module
+
+SYNTH = """
+HloModule test
+
+%body (p: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %p = (s32[], f32[128,128]{1,0}) parameter(0)
+  %gte0 = s32[] get-tuple-element(%p), index=0
+  %gte1 = f32[128,128]{1,0} get-tuple-element(%p), index=1
+  %c1 = s32[] constant(1)
+  %add = s32[] add(%gte0, %c1)
+  %ag = f32[128,512]{1,0} all-gather(%gte1), channel_id=1, dimensions={1}
+  %dot = f32[128,128]{1,0} dot(%gte1, %gte1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[128,128]{1,0}) tuple(%add, %dot)
+}
+
+%cond (p2: (s32[], f32[128,128])) -> pred[] {
+  %p2 = (s32[], f32[128,128]{1,0}) parameter(0)
+  %g = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%g, %n), direction=LT
+}
+
+ENTRY %main (x: f32[128,128]) -> f32[128,128] {
+  %x = f32[128,128]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %tup = (s32[], f32[128,128]{1,0}) tuple(%z, %x)
+  %w = (s32[], f32[128,128]{1,0}) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  %ar = f32[128,128]{1,0} all-reduce(%x), channel_id=2, to_apply=%add_comp
+  ROOT %out = f32[128,128]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_parse_module_finds_entry():
+    comps, entry = parse_module(SYNTH)
+    assert entry == "main"
+    assert set(comps) >= {"body", "cond", "main"}
+
+
+def test_trip_count_multiplied():
+    c = analyze(SYNTH)
+    # 5 iterations x dot(128x128 @ 128x128) = 5 * 2*128^3
+    assert c.flops == pytest.approx(5 * 2 * 128 ** 3)
+    # all-gather operand 128*128*4 bytes, 5 trips
+    assert c.coll["all-gather"] == pytest.approx(5 * 128 * 128 * 4)
+    # entry all-reduce operand once
+    assert c.coll["all-reduce"] == pytest.approx(128 * 128 * 4)
+
+
+def test_collective_bytes_legacy_parser():
+    out = collective_bytes(SYNTH)
+    assert out["all-reduce"] == 128 * 128 * 4
+    assert out["all-gather"] == 128 * 128 * 4     # no trip awareness (legacy)
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(flops=1e15, bytes_accessed=1e12, coll_bytes=1e9,
+                       chips=256)
+    assert t["dominant"] == "t_compute"
+    assert t["frac_compute"] == 1.0
+    t = roofline_terms(flops=1e12, bytes_accessed=1e15, coll_bytes=0,
+                       chips=256)
+    assert t["dominant"] == "t_memory"
+
+
+def test_model_flops_moe_uses_active():
+    from repro.configs import get_config
+    dense = get_config("tiny-dense")
+    moe = get_config("tiny-moe")
+    assert model_flops(moe, 1000) < 6 * moe.n_params() * 1000
+    assert model_flops(dense, 1000, backward=True) == \
+        6 * dense.n_params() * 1000
+
+
+def test_hw_constants():
+    assert HW_V5E.peak_flops == 197e12
+    assert HW_V5E.hbm_bw == 819e9
+    assert HW_V5E.ici_bw == 50e9

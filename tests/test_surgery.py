@@ -1,0 +1,126 @@
+"""Surgery invariants: regrouping, param re-stacking, cache structure."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import Block, StackGroup
+from repro.core.surgery import _regroup, compress, compress_config
+from repro.models import apply, init_cache, init_params
+
+
+def test_regroup_preserves_order_and_prefers_scan():
+    blocks = [Block(kind="attn")] * 10 + [Block(kind="nbl")] * 4
+    groups = _regroup(blocks)
+    flat = [b for g in groups for b in list(g.unit) * g.repeat]
+    assert flat == blocks
+    assert groups[0].repeat == 10 and groups[1].repeat == 4
+
+
+def test_regroup_detects_periods():
+    a, b = Block(kind="attn", window=32), Block(kind="attn")
+    blocks = [a, b] * 6
+    groups = _regroup(blocks)
+    assert len(groups) == 1 and groups[0].repeat == 6
+    assert groups[0].unit == (a, b)
+
+
+def test_compress_config_marks_layers():
+    cfg = get_config("tiny-dense")
+    new = compress_config(cfg, [4, 5], "nbl")
+    kinds = [b.kind for b in new.blocks()]
+    assert kinds == ["attn"] * 4 + ["nbl"] * 2
+    assert new.nbl_layers == (4, 5)
+    assert new.n_blocks == cfg.n_blocks
+
+
+@pytest.mark.parametrize("mode", ["nbl", "drop", "nbl_block", "drop_block"])
+def test_compressed_forward_matches_manual(mode):
+    """Surgery output == running the original blocks with the substitution
+    applied by hand (drop: identity mixer; nbl: x + Wx + b)."""
+    cfg = get_config("tiny-dense")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    d = cfg.d_model
+    rng = np.random.default_rng(0)
+    w = (rng.standard_normal((d, d)) * 0.02)
+    b = rng.standard_normal(d) * 0.01
+    ids = [3, 5]
+    maps = {i: (w, b) for i in ids}
+    ncfg, nparams = compress(cfg, params, ids, mode, linear_maps=maps)
+    out, _ = apply(ncfg, nparams, toks)
+    assert out.shape == (2, 16, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+    # dropping everything == removing those layers' contribution entirely
+    if mode == "drop_block":
+        full_ids = list(range(cfg.n_blocks))
+        ecfg, eparams = compress(cfg, params, full_ids, mode)
+        out2, _ = apply(ecfg, eparams, toks)
+        # model reduces to embed -> final_norm -> head
+        from repro.models.layers import rmsnorm, embed_tokens
+        x = embed_tokens(params["embed"], toks, jnp.float32)
+        x = rmsnorm(x, params["final_norm"], ncfg.norm_eps)
+        want = x @ params["embed"].T
+        np.testing.assert_allclose(np.asarray(out2), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_nbl_layers_have_no_cache():
+    cfg = get_config("tiny-dense")
+    ncfg = compress_config(cfg, [4, 5], "nbl")
+    cache = init_cache(ncfg, batch=2, max_len=64)
+    # the nbl group's cache sub-tree is empty (no K/V storage at all)
+    assert all(c is None for c in cache["groups"][-1]["blocks"])
+    # byte accounting: exactly (K-m)/K of the attention cache remains
+    from repro.models.kv_cache import cache_bytes
+    base = cache_bytes(cfg, 2, 64)
+    comp = cache_bytes(ncfg, 2, 64)
+    kv, hd, w = cfg.n_kv_heads, cfg.head_dim, 64
+    per_layer = 2 * 2 * kv * w * hd * 4 + w * 4
+    assert base - comp == 2 * per_layer
+
+
+def test_nbl_equals_manual_linear():
+    """A compressed nbl layer computes exactly x + xW + b."""
+    cfg = get_config("tiny-dense").replace(
+        stack=(StackGroup(unit=(Block(kind="attn"),), repeat=1),))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    d = cfg.d_model
+    w = np.eye(d) * 0.5
+    bvec = np.ones(d) * 0.1
+    ncfg, nparams = compress(cfg, params, [0], "nbl",
+                             linear_maps={0: (w, bvec)})
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                              cfg.vocab_size)
+    from repro.models.layers import embed_tokens, rmsnorm, mlp
+    x = embed_tokens(params["embed"], toks, jnp.float32)
+    h = x + (x @ w.T + bvec)
+    lp, _ = jax.tree.leaves, None
+    p0 = jax.tree.map(lambda a: a[0], nparams["groups"][0]["scanned"][0])
+    h2 = h + mlp(p0["ffn"], rmsnorm(h, p0["norm2"], cfg.norm_eps),
+                 cfg.mlp_act)
+    want = rmsnorm(h2, nparams["final_norm"], cfg.norm_eps) \
+        @ nparams["embed"].T
+    got, _ = apply(ncfg, nparams, toks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_zamba_shared_params_surgery():
+    """Linearizing mamba blocks in a hybrid keeps the shared attn intact."""
+    cfg = get_config("tiny-zamba")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    mamba_ids = [i for i, b in enumerate(cfg.blocks()) if b.kind == "mamba"]
+    d = cfg.d_model
+    maps = {i: (np.zeros((d, d)), np.zeros(d)) for i in mamba_ids[:2]}
+    ncfg, nparams = compress(cfg, params, mamba_ids[:2], "nbl",
+                             linear_maps=maps)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    out, _ = apply(ncfg, nparams, toks)
+    assert np.all(np.isfinite(np.asarray(out)))
