@@ -9,6 +9,10 @@
   fig3_prefill        Figure 3: analytic prefill speed-up vs context length
   table21_kv_cache    Table 21: KV-cache bytes vs context × NBL-m
   criterion_ablation  Appendix F.3: CCA-bound vs cosine selection
+  serving_throughput  throughput under load: continuous-batching engine at a
+                      FIXED cache byte budget — requests/s and p50/p99
+                      latency vs number of NBL-linearized layers (the freed
+                      KV budget converts into concurrent slots)
   kernels             µs/call of the three Pallas kernels (interpret mode —
                       CPU-emulated, structural check only)
 
@@ -161,6 +165,60 @@ def bench_criterion_ablation(fast: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+def bench_serving(fast: bool) -> None:
+    """Throughput under load (ROADMAP north-star scenario): the continuous-
+    batching engine serves a ragged request stream at a FIXED cache byte
+    budget while m attention layers are NBL-linearized. Linearized layers
+    carry no KV cache, so the same budget admits ~K/(K−m)× more slots
+    (launch/scheduler.nbl_slot_budget) and requests/s rises with m.
+    Reported per m: slots, requests/s, tokens/s, p50/p99 latency, and the
+    (deterministic) number of batched decode sweeps."""
+    from repro.configs import get_config
+    from repro.core.surgery import nbl_variant
+    from repro.launch.engine import Engine
+    from repro.launch.scheduler import latency_stats
+    from repro.models import init_params
+    from repro.models.kv_cache import cache_bytes
+
+    cfg = get_config("tiny-dense")
+    max_len = 64
+    budget = 2 * cache_bytes(cfg, 1, max_len)      # 2 slots uncompressed
+    n_req = 8 if fast else 16
+    max_new = 8
+    rng = np.random.default_rng(0)
+    lens = rng.integers(8, 25, n_req)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lens]
+
+    for m in (0, 1, 2, 3):
+        c = nbl_variant(cfg, m)
+        params = init_params(jax.random.PRNGKey(0), c)
+        eng = Engine(c, params, max_len=max_len, cache_budget_bytes=budget)
+        # warmup pass: compiles every prompt-length prefill + the decode jit
+        for p in prompts:
+            eng.submit(p, max_new)
+        eng.run()
+        # timed pass on warm jits
+        steps0 = eng.n_decode_steps
+        t0 = time.perf_counter()
+        rids = [eng.submit(p, max_new) for p in prompts]
+        eng.run()
+        dt = time.perf_counter() - t0
+        timed = [eng.finished[r] for r in rids]
+        s = latency_stats(timed)
+        emit(f"serving/nbl-{m}/n_slots", eng.n_slots, "fixed_budget")
+        emit(f"serving/nbl-{m}/requests_per_s", round(n_req / dt, 2))
+        emit(f"serving/nbl-{m}/tokens_per_s",
+             round(sum(len(r.tokens) for r in timed) / dt, 1))
+        emit(f"serving/nbl-{m}/p50_latency_ms",
+             round(s["p50_latency_s"] * 1e3, 1))
+        emit(f"serving/nbl-{m}/p99_latency_ms",
+             round(s["p99_latency_s"] * 1e3, 1))
+        emit(f"serving/nbl-{m}/decode_sweeps",
+             eng.n_decode_steps - steps0, "deterministic")
+
+
+# ---------------------------------------------------------------------------
 def bench_kernels(fast: bool) -> None:
     from repro.kernels import ops
 
@@ -271,6 +329,7 @@ BENCHES = {
     "fig3_prefill": bench_fig3_prefill,
     "table21_kv_cache": bench_kv_cache,
     "criterion_ablation": bench_criterion_ablation,
+    "serving_throughput": bench_serving,
     "spec_decode": bench_speculative,
     "quant_compose": bench_quant_compose,
     "lora": bench_lora,

@@ -63,6 +63,27 @@ def main() -> None:
     print(f"KV-cache reduction: {1 - kv1 / kv0:.1%} "
           f"(= m/K = {args.m}/{cfg.n_blocks} of attention caches)")
 
+    # the freed cache becomes admission headroom: at a fixed byte budget the
+    # continuous-batching engine runs more concurrent requests (ragged
+    # prompt lengths, slots recycled as requests retire).
+    from repro.launch.scheduler import nbl_slot_budget
+    from repro.launch.serve import serve_requests
+
+    max_len = 16 + args.new
+    budget = 2 * cache_bytes(cfg, 1, max_len)
+    rng = np.random.default_rng(7)
+    ragged = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+              for n in (8, 16, 11, 14, 9, 12)]
+    print(f"\n== continuous-batching engine, fixed budget {budget:,} B ==")
+    for tag, (c, p) in {"baseline": (cfg, params),
+                        f"nbl-{args.m}": (ncfg, nparams)}.items():
+        slots = nbl_slot_budget(c, budget, max_len)
+        _, stats = serve_requests(c, p, ragged, max_new=args.new,
+                                  max_len=max_len, n_slots=slots)
+        print(f"{tag:10s} {slots} slots  "
+              f"{stats['n_decode_steps']:3d} decode sweeps  "
+              f"{stats['requests_per_s']:.1f} req/s")
+
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# One-step CI for a bare CPU image:
+#   1. tier-1 suite (the ROADMAP verify command)
+#   2. fast continuous-batching engine smoke on the tiny config
+#
+#   bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== engine smoke (tiny config) =="
+python - <<'EOF'
+import warnings; warnings.filterwarnings("ignore")
+import jax, numpy as np, jax.numpy as jnp
+from repro.configs import get_config
+from repro.launch.engine import Engine
+from repro.launch.serve import generate
+from repro.models import init_params
+
+cfg = get_config("tiny-dense")
+params = init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+           for n in (5, 9, 7)]
+refs = [np.asarray(generate(cfg, params, jnp.asarray(p)[None],
+                            max_new=4))[0] for p in prompts]
+eng = Engine(cfg, params, max_len=16, n_slots=2)
+rids = [eng.submit(p, 4) for p in prompts]
+out = eng.run()
+for i, rid in enumerate(rids):
+    np.testing.assert_array_equal(out[rid], refs[i])
+s = eng.stats()
+print(f"engine smoke OK: {s['n']} requests, {s['n_decode_steps']} decode "
+      f"sweeps, {s['n_slots']} slots")
+EOF
+echo "CI OK"

@@ -236,6 +236,8 @@ SHAPES: dict[str, ShapeConfig] = {
     "train_4k":    ShapeConfig("train_4k",    "train",   4_096,   256),
     "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768,  32),
     "decode_32k":  ShapeConfig("decode_32k",  "decode",  32_768,  128),
+    # continuous-batching engine decode: 128 serving slots, per-slot pos
+    "serve_32k":   ShapeConfig("serve_32k",   "serve",   32_768,  128),
     "long_500k":   ShapeConfig("long_500k",   "decode",  524_288, 1),
 }
 

@@ -21,4 +21,6 @@ from repro.core.moments import (  # noqa: F401
     finalize, init_moments, merge_moments, psum_moments, update_moments,
 )
 from repro.core.selection import greedy_select, rank_layers, select_layers  # noqa: F401
-from repro.core.surgery import compress, compress_config, compress_params  # noqa: F401
+from repro.core.surgery import (  # noqa: F401
+    compress, compress_config, compress_params, nbl_variant,
+)

@@ -62,6 +62,14 @@ def _regroup(blocks: list[Block], max_period: int = 8) -> tuple[StackGroup, ...]
     return tuple(groups)
 
 
+def nbl_variant(cfg: ModelConfig, m: int) -> ModelConfig:
+    """Compressed config: linearize the m deepest self-attention layers
+    (paper App. G: selected layers concentrate at the end of the stack).
+    m=0 returns the config unchanged."""
+    cand = cfg.attn_layer_indices()
+    return compress_config(cfg, cand[-m:], "nbl") if m else cfg
+
+
 def compress_config(cfg: ModelConfig, layer_ids: Iterable[int],
                     mode: str = "nbl") -> ModelConfig:
     """New config with ``layer_ids`` transformed per ``mode``."""

@@ -158,8 +158,10 @@ def cache_specs(tree: Any) -> Any:
             return s
         if leaf.ndim == 4:        # (L, B, H, P)/(L, B, k, ch) mamba-ish
             return shaped_spec(leaf.shape, None, "dp", "model", None)
-        if leaf.ndim == 2:        # (L, W) kpos
+        if leaf.ndim == 2:        # (L, W) kpos (monolithic cache)
             return shaped_spec(leaf.shape, None, None)
+        # fallback covers (L, B, W) per-slot kpos (slot cache) and any
+        # other batch-led state: slot/batch dim -> dp, rest replicated
         return shaped_spec(leaf.shape,
                            *((None, "dp") + (None,) * (leaf.ndim - 2)))
     return jax.tree.map(one, tree)

@@ -30,8 +30,10 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 from repro.configs import (  # noqa: E402
     ASSIGNED_ARCHS, SHAPES, get_config, shape_applicable,
 )
-from repro.core.surgery import compress_config  # noqa: E402
-from repro.distributed.api import shaped_spec  # noqa: E402
+from repro.core.surgery import nbl_variant  # noqa: E402
+from repro.distributed.api import (  # noqa: E402
+    jit_shardings, shaped_spec, use_mesh,
+)
 from repro.distributed.sharding import (  # noqa: E402
     batch_specs, cache_specs, param_specs,
 )
@@ -40,13 +42,6 @@ from repro.launch.specs import input_specs, param_shapes  # noqa: E402
 from repro.models import decode_step, loss_fn, prefill  # noqa: E402
 from repro.optim import adamw_init, adamw_update, get_schedule  # noqa: E402
 from repro.roofline.analysis import summarize  # noqa: E402
-
-
-def nbl_variant(cfg, m: int):
-    """Compressed config: linearize the m deepest self-attention layers
-    (paper App. G: selected layers concentrate at the end of the stack)."""
-    cand = cfg.attn_layer_indices()
-    return compress_config(cfg, cand[-m:], "nbl") if m else cfg
 
 
 def build_target(cfg, shape):
@@ -86,13 +81,16 @@ def build_target(cfg, shape):
         ntok = shape.global_batch * shape.seq_len
         return prefill_step, args, shardings, ntok, False
 
-    # decode: one new token against a seq_len KV cache
+    # decode/serve: one new token per sequence against a seq_len KV cache.
+    # "serve" is the engine's batched slot-decode: pos is a per-slot (B,)
+    # vector sharded with the slot dim; "decode" keeps the scalar pos.
     def serve_step(params, token, cache, pos):
         return decode_step(cfg, params, token, cache, pos)
     cspecs = cache_specs(ins["cache"])
+    pos_spec = shaped_spec(ins["pos"].shape, "dp") if ins["pos"].ndim else P()
     args = (pshapes, ins["token"], ins["cache"], ins["pos"])
     shardings = (pspecs, shaped_spec(ins["token"].shape, "dp", None),
-                 cspecs, P())
+                 cspecs, pos_spec)
     return serve_step, args, shardings, shape.global_batch, False
 
 
@@ -111,14 +109,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, nbl_m: int = 0,
     chips = int(np.prod(tuple(mesh.shape.values())))
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             fn, args, shardings, ntok, backward = build_target(cfg, shape)
             donate_args = ()
             if donate and shape.kind == "train":
                 donate_args = (0, 1)
-            elif donate and shape.kind == "decode":
+            elif donate and shape.kind in ("decode", "serve"):
                 donate_args = (2,)
-            lowered = jax.jit(fn, in_shardings=shardings,
+            lowered = jax.jit(fn, in_shardings=jit_shardings(shardings),
                               donate_argnums=donate_args).lower(*args)
             compiled = lowered.compile()
             try:

@@ -1,0 +1,254 @@
+"""Continuous-batching serving engine over a slot-indexed KV cache.
+
+Architecture (scheduler → engine → slot cache):
+
+  Scheduler (launch/scheduler.py)
+      FIFO queue + NBL-aware slot budget: a fixed HBM byte budget divided
+      by the per-request cache footprint. NBL-linearized layers carry no
+      cache, so a compressed model admits more concurrent requests on the
+      same budget (paper §4.2).
+  Engine (this module)
+      Owns params + one slot cache (models/kv_cache.init_slot_cache).
+      ``step()`` interleaves: (1) admission — for every free slot, pop a
+      request, prefill it at batch=1, ``assign_slot`` its cache into the
+      free row, emit its first token; (2) one *batched* decode over all
+      slots with a per-slot position vector — retired/empty rows ride
+      along masked by their kpos = -1 (models/attention.decode_attention);
+      (3) retirement — EOS or max-token requests release their slot.
+      Reassignment (``assign_slot``) overwrites every cache leaf's slot
+      row wholesale, so a recycled slot can never read stale KV; between
+      tenancies the dead row's decode output is simply discarded.
+      ``models/kv_cache.reset_slot`` remains available for explicitly
+      scrubbing a retired slot's state.
+  Slot cache (models/kv_cache.py)
+      (L, n_slots, ...) leaves; per-slot `kpos` position rows.
+
+The decode jit compiles ONCE (shapes are (n_slots, 1) regardless of how
+many requests are in flight); prefill compiles once per distinct prompt
+length (bucket prompts client-side if that matters). Under a mesh the same
+engine runs sharded: params/caches take their production PartitionSpecs
+(distributed/sharding.py), batch/slot dims shard over "dp".
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.api import jit_shardings, mesh_axes, shaped_spec
+from repro.distributed.sharding import cache_specs, param_specs
+from repro.launch.scheduler import (
+    Request, Scheduler, latency_stats, nbl_slot_budget,
+)
+from repro.models import decode_step, prefill
+from repro.models.kv_cache import assign_slot, init_slot_cache
+
+
+class Engine:
+    """Request-level continuous-batching decode engine.
+
+    Either ``n_slots`` or ``cache_budget_bytes`` (NBL-aware: converted via
+    ``nbl_slot_budget``) fixes the concurrency; given both, the budget is a
+    ceiling. ``max_len`` bounds prompt + generated tokens per request.
+
+    Sharding is captured at CONSTRUCTION time: build the engine inside
+    ``use_mesh(mesh)`` to get sharded params/caches — an engine built
+    un-meshed stays fully replicated even if later driven under a mesh.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int,
+                 n_slots: Optional[int] = None,
+                 cache_budget_bytes: Optional[int] = None,
+                 eos_id: Optional[int] = None,
+                 temperature: float = 0.0, seed: int = 0,
+                 scheduler: Optional[Scheduler] = None,
+                 donate: bool = True):
+        if cache_budget_bytes is not None:
+            budget_slots = nbl_slot_budget(cfg, cache_budget_bytes, max_len)
+            # an explicit n_slots may narrow the budget, never exceed it
+            n_slots = budget_slots if n_slots is None \
+                else min(n_slots, budget_slots)
+        elif n_slots is None:
+            raise ValueError("need n_slots or cache_budget_bytes")
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.cfg = cfg
+        self.params = params
+        self.max_len = int(max_len)
+        self.n_slots = int(n_slots)
+        self.eos_id = eos_id
+        self.temperature = float(temperature)
+        self._rng = np.random.default_rng(seed)
+        self.scheduler = scheduler or Scheduler()
+
+        self.cache = init_slot_cache(cfg, self.n_slots, self.max_len)
+        self.slot_req: list[Optional[Request]] = [None] * self.n_slots
+        self.slot_pos = np.zeros(self.n_slots, np.int32)   # pos of last tok
+        self.slot_tok = np.zeros(self.n_slots, np.int32)   # last emitted tok
+        self.finished: dict[int, Request] = {}
+        self.n_decode_steps = 0
+        self.n_prefills = 0
+
+        sharded = bool(mesh_axes())
+        pspecs = param_specs(jax.eval_shape(lambda: params)) \
+            if sharded else None
+        cspecs = cache_specs(jax.eval_shape(lambda: self.cache)) \
+            if sharded else None
+
+        def _decode(p, token, cache, pos):
+            return decode_step(cfg, p, token, cache, pos)
+
+        def _assign(slot_cache, pcache, slot):
+            return assign_slot(slot_cache, pcache, slot)
+
+        dkw = dict(donate_argnums=(2,)) if donate else {}
+        akw = dict(donate_argnums=(0,)) if donate else {}
+        if sharded:
+            tok_spec = shaped_spec((self.n_slots, 1), "dp", None)
+            pos_spec = shaped_spec((self.n_slots,), "dp")
+            self._decode_jit = jax.jit(
+                _decode,
+                in_shardings=jit_shardings((pspecs, tok_spec, cspecs,
+                                            pos_spec)),
+                out_shardings=jit_shardings((None, cspecs)), **dkw)
+            self._assign_jit = jax.jit(
+                _assign, in_shardings=jit_shardings((cspecs, None, None)),
+                out_shardings=jit_shardings(cspecs), **akw)
+        else:
+            self._decode_jit = jax.jit(_decode, **dkw)
+            self._assign_jit = jax.jit(_assign, **akw)
+        # under a mesh the batch=1 prefill cache must come out in the same
+        # production layout the slot cache uses, so _assign_jit never
+        # reshards on admission.
+        self._pspecs = pspecs
+        self._pcspecs = None
+        if sharded:
+            from repro.launch.specs import cache_shapes
+            self._pcspecs = cache_specs(cache_shapes(cfg, 1, self.max_len))
+        self._prefill_jits: dict = {}   # (prompt_len, with_enc) -> jit fn
+
+    # ------------------------------------------------------------- admin --
+
+    def submit(self, prompt, max_new: int, *, enc=None) -> int:
+        """Queue a request; returns its id. ``prompt`` 1-D int tokens."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size + max_new > self.max_len:
+            raise ValueError(
+                f"prompt({prompt.size}) + max_new({max_new}) exceeds "
+                f"engine max_len={self.max_len}")
+        return self.scheduler.submit(prompt, max_new, enc=enc)
+
+    @property
+    def active_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.active_slots) or len(self.scheduler) > 0
+
+    # ----------------------------------------------------------- serving --
+
+    def _prefill_fn(self, prompt_len: int, with_enc: bool):
+        key = (prompt_len, with_enc)
+        fn = self._prefill_jits.get(key)
+        if fn is None:
+            cfg, max_len = self.cfg, self.max_len
+
+            def _prefill(p, tokens, enc=None):
+                return prefill(cfg, p, tokens, enc=enc, cache_len=max_len)
+
+            kw = {}
+            if self._pcspecs is not None:
+                ins = (self._pspecs, None) + ((None,) if with_enc else ())
+                kw = dict(in_shardings=jit_shardings(ins),
+                          out_shardings=jit_shardings((None, self._pcspecs)))
+            fn = jax.jit(_prefill, **kw)
+            self._prefill_jits[key] = fn
+        return fn
+
+    def _sample(self, logits_row: np.ndarray) -> int:
+        """logits_row: (V,) float32."""
+        if self.temperature <= 0.0:
+            return int(np.argmax(logits_row))
+        z = logits_row / self.temperature
+        z = z - z.max()
+        p = np.exp(z)
+        return int(self._rng.choice(z.shape[0], p=p / p.sum()))
+
+    def _emit(self, req: Request, slot: int, tok: int, now: float) -> None:
+        """Record one generated token; retire the slot when done."""
+        req.tokens.append(tok)
+        if not req.t_first:
+            req.t_first = now
+        self.slot_tok[slot] = tok
+        done = (len(req.tokens) >= req.max_new
+                or (self.eos_id is not None and tok == self.eos_id))
+        if done:
+            # no cache scrub needed: assign_slot overwrites the full slot
+            # row at the next tenancy, and dead rows are never read.
+            req.t_finish = now
+            self.finished[req.rid] = req
+            self.slot_req[slot] = None
+
+    def _admit(self, req: Request, slot: int) -> None:
+        now = time.monotonic()
+        req.t_admit = now
+        fn = self._prefill_fn(len(req.prompt), req.enc is not None)
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+        args = (self.params, tokens) + (
+            (jnp.asarray(req.enc)[None],) if req.enc is not None else ())
+        logits, pcache = fn(*args)
+        self.n_prefills += 1
+        self.cache = self._assign_jit(self.cache, pcache, jnp.int32(slot))
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = len(req.prompt)     # position of its 1st token
+        tok = self._sample(np.asarray(logits[0, -1], np.float32))
+        self._emit(req, slot, tok, time.monotonic())
+
+    def step(self) -> int:
+        """One engine iteration: admit into free slots, then one batched
+        decode of everything in flight. Returns #tokens emitted (admission
+        first-tokens included)."""
+        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        emitted = 0
+        for req in self.scheduler.admit(len(free)):
+            self._admit(req, free.pop())
+            emitted += 1                       # prefill emits a first token
+
+        active = self.active_slots
+        if not active:
+            return emitted
+        token = jnp.asarray(self.slot_tok[:, None])
+        pos = jnp.asarray(self.slot_pos)
+        logits, self.cache = self._decode_jit(self.params, token,
+                                              self.cache, pos)
+        self.n_decode_steps += 1
+        rows = np.asarray(logits[:, -1], np.float32)
+        now = time.monotonic()
+        for slot in active:
+            req = self.slot_req[slot]
+            self.slot_pos[slot] += 1
+            self._emit(req, slot, self._sample(rows[slot]), now)
+            emitted += 1
+        return emitted
+
+    def run(self, max_steps: Optional[int] = None) -> dict[int, np.ndarray]:
+        """Drain the queue; returns {rid: generated tokens (np.int32)}."""
+        steps = 0
+        while self.has_work:
+            self.step()
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return {rid: np.asarray(r.tokens, np.int32)
+                for rid, r in sorted(self.finished.items())}
+
+    def stats(self) -> dict:
+        s = latency_stats(list(self.finished.values()))
+        s.update(n_slots=self.n_slots, n_decode_steps=self.n_decode_steps,
+                 n_prefills=self.n_prefills)
+        return s

@@ -1,0 +1,124 @@
+"""Request scheduling for the continuous-batching engine.
+
+Data flow: ``Scheduler`` (this module) holds the waiting-request queue and
+decides *how many* requests may be in flight; ``launch/engine.py`` owns the
+slot-indexed KV cache (models/kv_cache.py) and moves admitted requests
+through prefill → batched decode → retirement, recycling the freed slot.
+
+NBL-aware admission budget
+--------------------------
+The number of concurrent slots is derived from an HBM byte budget:
+
+    per_slot = cache_bytes(cfg, batch=1, max_len)      # one request's state
+    n_slots  = clamp(budget_bytes // per_slot, 1, max_slots)
+
+NBL-linearized layers carry NO cache (kv_cache.py), so compressing m of K
+attention layers shrinks ``per_slot`` by ≈ m/K (paper §4.2, Table 21) and
+the same budget admits ≈ K/(K−m)× more concurrent requests. This is the
+mechanism that converts NBL's freed serve-state into served traffic — the
+throughput benchmark (benchmarks/run.py serving_throughput) measures
+requests/s rising monotonically with m at a fixed budget.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.kv_cache import cache_bytes
+
+
+@dataclass
+class Request:
+    """One generation request. ``prompt`` is a 1-D int32 token array."""
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    enc: Optional[np.ndarray] = None          # VLM frontend embeddings (T,d)
+    # lifecycle timestamps (engine-filled; time.monotonic seconds)
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first: float = 0.0
+    t_finish: float = 0.0
+    tokens: list = field(default_factory=list)
+
+    @property
+    def latency(self) -> float:
+        return self.t_finish - self.t_submit
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token."""
+        return self.t_first - self.t_submit
+
+
+def nbl_slot_budget(cfg: ModelConfig, budget_bytes: int, max_len: int,
+                    *, max_slots: int = 256) -> int:
+    """Concurrent-slot count a byte budget buys at ``max_len`` context.
+    Fully-linearized stacks (per-slot state = 0) clamp to ``max_slots``."""
+    per_slot = cache_bytes(cfg, 1, max_len)
+    if per_slot <= 0:
+        return max_slots
+    return int(max(1, min(max_slots, budget_bytes // per_slot)))
+
+
+class Scheduler:
+    """FIFO admission queue with a per-step prefill cap.
+
+    ``max_prefill_per_step`` bounds head-of-line blocking: each engine step
+    admits at most that many new requests (each admission runs a serial
+    prefill) before the batched decode of everything in flight.
+    """
+
+    def __init__(self, *, max_prefill_per_step: int = 4):
+        if max_prefill_per_step < 1:
+            raise ValueError("max_prefill_per_step must be >= 1 (the engine "
+                             "drain loop would never admit work)")
+        self.queue: deque[Request] = deque()
+        self.max_prefill_per_step = max_prefill_per_step
+        self._next_rid = 0
+
+    def submit(self, prompt, max_new: int, *, enc=None,
+               now: Optional[float] = None) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        req = Request(rid=self._next_rid, prompt=prompt, max_new=max_new,
+                      enc=enc, t_submit=time.monotonic() if now is None
+                      else now)
+        self._next_rid += 1
+        self.queue.append(req)
+        return req.rid
+
+    def admit(self, free_slots: int) -> list[Request]:
+        """Pop up to min(free_slots, max_prefill_per_step) requests, FIFO."""
+        n = min(free_slots, self.max_prefill_per_step, len(self.queue))
+        return [self.queue.popleft() for _ in range(n)]
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+
+def latency_stats(requests: list[Request]) -> dict:
+    """requests/s + latency percentiles over a finished request set."""
+    done = [r for r in requests if r.t_finish > 0]
+    if not done:
+        return {"n": 0}
+    lat = np.array([r.latency for r in done])
+    ttft = np.array([r.ttft for r in done])
+    span = (max(r.t_finish for r in done)
+            - min(r.t_submit for r in done)) or 1e-9
+    return {
+        "n": len(done),
+        "requests_per_s": len(done) / span,
+        "tokens_per_s": sum(len(r.tokens) for r in done) / span,
+        "p50_latency_s": float(np.percentile(lat, 50)),
+        "p99_latency_s": float(np.percentile(lat, 99)),
+        "p50_ttft_s": float(np.percentile(ttft, 50)),
+    }

@@ -1,26 +1,63 @@
-"""Serving driver: batched prefill + autoregressive decode.
+"""Serving drivers — thin compatibility layer over the engine.
+
+Production path: ``launch/engine.py`` (continuous batching over a slot
+cache, scheduler-driven admission). This module keeps two entry points:
+
+  serve_requests   convenience wrapper: prompts in, tokens out, running the
+                   continuous-batching engine under the hood.
+  generate         the original fixed-batch, fixed-length decode loop. Kept
+                   as the *reference* implementation: the engine parity test
+                   asserts per-request engine output == generate output.
 
 NBL-linearized layers carry no KV cache, so a compressed model's serve
-state is (K−m)/K of the baseline's — visible directly in the dry-run
-memory analysis and in benchmarks/kv_cache.py (paper §4.2 / Table 21).
+state is (K−m)/K of the baseline's — the engine's scheduler converts that
+saving into extra concurrent slots (launch/scheduler.nbl_slot_budget).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.distributed.api import jit_shardings
 from repro.distributed.sharding import cache_specs, param_specs
+from repro.launch.engine import Engine
 from repro.launch.specs import cache_shapes, param_shapes
 from repro.models import decode_step, prefill
 
 
+def serve_requests(cfg: ModelConfig, params, prompts: Sequence, *,
+                   max_new: int, max_len: Optional[int] = None,
+                   n_slots: Optional[int] = None,
+                   cache_budget_bytes: Optional[int] = None,
+                   eos_id: Optional[int] = None,
+                   temperature: float = 0.0, seed: int = 0):
+    """Serve a batch of (possibly ragged) prompts through the engine.
+
+    Returns (list of per-request token arrays in submission order, stats).
+    """
+    prompts = [jnp.asarray(p).reshape(-1) for p in prompts]
+    if not prompts:
+        raise ValueError("serve_requests needs at least one prompt")
+    if max_len is None:
+        max_len = max(int(p.shape[0]) for p in prompts) + max_new
+    if n_slots is None and cache_budget_bytes is None:
+        n_slots = min(len(prompts), 8)
+    eng = Engine(cfg, params, max_len=max_len, n_slots=n_slots,
+                 cache_budget_bytes=cache_budget_bytes, eos_id=eos_id,
+                 temperature=temperature, seed=seed)
+    rids = [eng.submit(p, max_new) for p in prompts]
+    out = eng.run()
+    return [out[r] for r in rids], eng.stats()
+
+
 def make_serve_fns(cfg: ModelConfig, *, batch: int, prompt_len: int,
                    max_new: int, donate: bool = True):
-    """Returns (prefill_jit, decode_jit). Call under the serving mesh."""
+    """Returns (prefill_jit, decode_jit) for the fixed-batch path. Call
+    under the serving mesh. (The engine builds its own sharded fns.)"""
     cache_len = prompt_len + max_new
     pspecs = param_specs(param_shapes(cfg))
     cspecs = cache_specs(cache_shapes(cfg, batch, cache_len))
@@ -34,12 +71,12 @@ def make_serve_fns(cfg: ModelConfig, *, batch: int, prompt_len: int,
     enc_spec = (P("data", None, None),) if cfg.family == "vlm" else ()
     prefill_jit = jax.jit(
         _prefill,
-        in_shardings=(pspecs, P("data", None)) + enc_spec,
-        out_shardings=(None, cspecs))
+        in_shardings=jit_shardings((pspecs, P("data", None)) + enc_spec),
+        out_shardings=jit_shardings((None, cspecs)))
     decode_jit = jax.jit(
         _decode,
-        in_shardings=(pspecs, P("data", None), cspecs, P()),
-        out_shardings=(None, cspecs),
+        in_shardings=jit_shardings((pspecs, P("data", None), cspecs, P())),
+        out_shardings=jit_shardings((None, cspecs)),
         donate_argnums=(2,) if donate else ())
     return prefill_jit, decode_jit
 
@@ -47,7 +84,8 @@ def make_serve_fns(cfg: ModelConfig, *, batch: int, prompt_len: int,
 def generate(cfg: ModelConfig, params, tokens, *, max_new: int,
              enc=None, greedy: bool = True, seed: int = 0,
              use_jit_fns: Optional[tuple] = None):
-    """Batched generation. tokens: (B, S) int32 prompt. Returns (B, max_new)."""
+    """Fixed-batch generation (reference loop; all sequences share one
+    position). tokens: (B, S) int32 prompt. Returns (B, max_new)."""
     b, s = tokens.shape
     if use_jit_fns is not None:
         prefill_fn, decode_fn = use_jit_fns

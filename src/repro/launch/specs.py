@@ -7,6 +7,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import init_cache, init_params
+from repro.models.kv_cache import init_slot_cache
 
 
 def sds(shape, dtype):
@@ -21,12 +22,19 @@ def cache_shapes(cfg: ModelConfig, batch: int, max_len: int):
     return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
 
 
+def slot_cache_shapes(cfg: ModelConfig, n_slots: int, max_len: int):
+    """Slot-indexed serving cache (per-slot kpos) — engine decode state."""
+    return jax.eval_shape(lambda: init_slot_cache(cfg, n_slots, max_len))
+
+
 def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
     """Inputs for the step function selected by ``shape.kind``:
 
       train    -> {"batch": {tokens, labels[, enc]}}
       prefill  -> {"tokens"[, "enc"]}
       decode   -> {"token", "pos", "cache"}   (cache at shape.seq_len)
+      serve    -> {"token", "pos", "cache"}   (slot cache; pos is a per-slot
+                  (B,) vector — the engine's batched decode step)
     """
     b, s = shape.global_batch, shape.seq_len
     dt = jnp.dtype(cfg.compute_dtype)
@@ -45,4 +53,8 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
         return {"token": sds((b, 1), jnp.int32),
                 "pos": sds((), jnp.int32),
                 "cache": cache_shapes(cfg, b, s)}
+    if shape.kind == "serve":
+        return {"token": sds((b, 1), jnp.int32),
+                "pos": sds((b,), jnp.int32),
+                "cache": slot_cache_shapes(cfg, b, s)}
     raise ValueError(shape.kind)

@@ -238,25 +238,56 @@ def cross_attention(cfg, p: dict, x: jax.Array, enc_kv=None,
 
 def decode_attention(cfg, p: dict, x: jax.Array, cache: dict, pos: jax.Array,
                      *, window: Optional[int]) -> tuple[jax.Array, dict]:
-    """Single-token decode. x: (B, 1, d); cache: {k, v: (B,KV,W,hd),
-    kpos: (W,) int32 (absolute position per slot, -1 = empty)}."""
+    """Single-token decode. x: (B, 1, d); cache: {k, v: (B,KV,W,hd), kpos}.
+
+    Two position modes share the kernel:
+      scalar pos, kpos (W,)    — monolithic batch: every sequence decodes at
+                                 the same absolute position (generate()).
+      vector pos (B,), kpos (B,W) — slot cache: each batch row is a serving
+                                 slot at its own position. Writes go to
+                                 slot-local ring index pos[b] % W via a
+                                 one-hot select, and validity/window masks
+                                 are per-slot, so retired/fresh slots in one
+                                 batched step never cross-attend.
+    """
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     b = x.shape[0]
     w = cache["k"].shape[2]
+    per_slot = cache["kpos"].ndim == 2
+    pos = jnp.asarray(pos, jnp.int32)
+    if per_slot and pos.ndim == 0:
+        pos = jnp.full((b,), 0, jnp.int32) + pos
+    assert per_slot == (pos.ndim == 1), (cache["kpos"].shape, pos.shape)
+
     q = _split_heads(x @ p["wq"], h, hd)
     k_new = _split_heads(x @ p["wk"], kvh, hd)
     v_new = _split_heads(x @ p["wv"], kvh, hd)
-    ppos = jnp.full((1,), 0, jnp.int32) + pos
-    q = apply_rope(q, ppos[None, None, :], cfg.rope_theta)
-    k_new = apply_rope(k_new, ppos[None, None, :], cfg.rope_theta)
+    # rope positions: (1,1,1) broadcasts over (B,H,1,hd); per-slot (B,1,1)
+    # gives every slot its own rotation.
+    ppos = pos[:, None, None] if per_slot else pos[None, None, None]
+    q = apply_rope(q, ppos, cfg.rope_theta)
+    k_new = apply_rope(k_new, ppos, cfg.rope_theta)
 
-    slot = (pos % w).astype(jnp.int32)
-    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                     (0, 0, slot, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                     (0, 0, slot, 0))
-    kpos = jax.lax.dynamic_update_slice(cache["kpos"],
-                                        ppos.astype(jnp.int32), (slot,))
+    if per_slot:
+        slot = (pos % w).astype(jnp.int32)                      # (B,)
+        # batched scatter: touch only each row's written W-index (a one-hot
+        # select would read+rewrite the whole cache every step)
+        rows = jnp.arange(b)
+        k = cache["k"].at[rows, :, slot].set(
+            k_new[:, :, 0].astype(cache["k"].dtype))
+        v = cache["v"].at[rows, :, slot].set(
+            v_new[:, :, 0].astype(cache["v"].dtype))
+        kpos = cache["kpos"].at[rows, slot].set(pos)            # (B, W)
+        pos_b = pos[:, None]                                    # (B, 1)
+    else:
+        slot = (pos % w).astype(jnp.int32)
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, 0, slot, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, 0, slot, 0))
+        kpos = jax.lax.dynamic_update_slice(
+            cache["kpos"], pos[None], (slot,))
+        pos_b = pos
 
     rep = h // kvh
     qg = q.reshape(b, kvh, rep, hd)
@@ -264,10 +295,11 @@ def decode_attention(cfg, p: dict, x: jax.Array, cache: dict, pos: jax.Array,
                     preferred_element_type=jnp.float32)
     sc = sc * (cfg.attn_scale or hd ** -0.5)
     sc = softcap(sc, cfg.attn_logit_softcap)
-    valid = (kpos >= 0) & (kpos <= pos)
+    valid = (kpos >= 0) & (kpos <= pos_b)
     if window is not None:
-        valid &= (pos - kpos) < window
-    sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+        valid &= (pos_b - kpos) < window
+    mask = valid[:, None, None, :] if per_slot else valid[None, None, None, :]
+    sc = jnp.where(mask, sc, NEG_INF)
     pr = jax.nn.softmax(sc, axis=-1)
     out = jnp.einsum("bgrt,bgtd->bgrd", pr.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)

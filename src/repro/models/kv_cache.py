@@ -2,6 +2,26 @@
 {"groups": [{"blocks": [cache_or_None per block]}]}. Blocks of kind
 "nbl"/"drop" carry NO cache — NBL's KV-cache saving (paper §4.2) is
 structural, and shows up directly in the dry-run memory analysis.
+
+Two cache layouts share the block shapes:
+
+  init_cache       monolithic per-batch cache: every sequence is at the same
+                   decode position, so attention slot-validity (`kpos`) is
+                   shared across the batch — shape (L, W).
+  init_slot_cache  slot-indexed serving cache: the batch dim is a pool of
+                   request *slots*, each at its own position, so `kpos` gains
+                   the slot dim — shape (L, n_slots, W). The continuous-
+                   batching engine (launch/engine.py) prefills one request at
+                   a time and `assign_slot`s its cache into a free slot;
+                   assignment overwrites every leaf's slot row wholesale, so
+                   a recycled slot can never attend to the previous request's
+                   KV. `reset_slot` explicitly scrubs a retired slot without
+                   reassigning it.
+
+Per-slot bytes (`cache_bytes(cfg, 1, max_len)`) is the unit of the
+scheduler's NBL-aware admission budget: linearizing m of K attention layers
+shrinks it by m/K, which converts directly into more concurrent slots on the
+same HBM (launch/scheduler.py).
 """
 from __future__ import annotations
 
@@ -19,18 +39,20 @@ def _attn_cache_len(cfg: ModelConfig, blk: Block, max_len: int) -> int:
 
 
 def _block_cache(cfg: ModelConfig, blk: Block, batch: int, max_len: int,
-                 stack: int, dtype):
-    """Returns a cache pytree for one block (leading `stack` dim if > 0)."""
+                 stack: int, dtype, *, per_slot_pos: bool = False):
+    """Returns a cache pytree for one block (leading `stack` dim if > 0).
+    With ``per_slot_pos`` the attention `kpos` carries a slot (batch) dim."""
     def shp(*s):
         return (stack, *s) if stack else s
 
     if blk.kind == "attn":
         w = _attn_cache_len(cfg, blk, max_len)
         kv, hd = cfg.n_kv_heads, cfg.head_dim
+        kpos_shape = shp(batch, w) if per_slot_pos else shp(w)
         return {
             "k": jnp.zeros(shp(batch, kv, w, hd), dtype),
             "v": jnp.zeros(shp(batch, kv, w, hd), dtype),
-            "kpos": jnp.full(shp(w), -1, jnp.int32),
+            "kpos": jnp.full(kpos_shape, -1, jnp.int32),
         }
     if blk.kind == "cross_attn":
         kv, hd = cfg.n_kv_heads, cfg.head_dim
@@ -52,22 +74,67 @@ def _block_cache(cfg: ModelConfig, blk: Block, batch: int, max_len: int,
     return None  # nbl / drop: no cache
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+def _init(cfg: ModelConfig, batch: int, max_len: int, *, per_slot_pos: bool):
     dtype = jnp.dtype(cfg.compute_dtype)
     groups = []
     for g in cfg.stack:
         blocks = []
         for blk in g.unit:
-            stack = 0 if blk.shared else g.repeat
-            # shared blocks still need one cache per *invocation*
-            stack = g.repeat if blk.shared else stack
-            blocks.append(_block_cache(cfg, blk, batch, max_len, stack, dtype))
+            # shared blocks keep ONE param copy but still need one cache per
+            # *invocation* of the group unit, so every block stacks g.repeat
+            # caches for the scan.
+            stack = g.repeat
+            blocks.append(_block_cache(cfg, blk, batch, max_len, stack, dtype,
+                                       per_slot_pos=per_slot_pos))
         groups.append({"blocks": blocks})
     return {"groups": groups}
 
 
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Monolithic cache: all sequences share one decode position."""
+    return _init(cfg, batch, max_len, per_slot_pos=False)
+
+
+def init_slot_cache(cfg: ModelConfig, n_slots: int, max_len: int):
+    """Slot-indexed serving cache: batch dim = request slots, each with its
+    own `kpos` row. Decode takes a per-slot position vector (B,)."""
+    return _init(cfg, n_slots, max_len, per_slot_pos=True)
+
+
+def assign_slot(slot_cache, prefill_cache, slot):
+    """Write a batch=1 prefill cache into row ``slot`` of a slot cache.
+
+    ``slot`` may be traced (the engine jits this with the slot cache
+    donated). Prefill `kpos` leaves are (L, W) — shared across the
+    prefill batch — and broadcast into the slot cache's (L, B, W) layout.
+    """
+    def one(dst, src):
+        if src.ndim == dst.ndim - 1:            # kpos (L, W) -> (L, 1, W)
+            src = src[:, None]
+        idx = (0, slot) + (0,) * (dst.ndim - 2)
+        return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), idx)
+
+    return jax.tree.map(one, slot_cache, prefill_cache)
+
+
+def reset_slot(slot_cache, slot):
+    """Invalidate row ``slot``: `kpos` -> -1 (attention slots masked) and
+    every state leaf -> 0 (SSM/conv/cross-attn KV). A recycled slot then
+    carries no trace of the retired request even before reassignment."""
+    def one(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        fill = -1 if name == "kpos" else 0
+        row = jnp.full(leaf.shape[:1] + (1,) + leaf.shape[2:], fill,
+                       leaf.dtype)
+        idx = (0, slot) + (0,) * (leaf.ndim - 2)
+        return jax.lax.dynamic_update_slice(leaf, row, idx)
+
+    return jax.tree_util.tree_map_with_path(one, slot_cache)
+
+
 def cache_bytes(cfg: ModelConfig, batch: int, max_len: int) -> int:
-    """Analytic KV/state cache size (paper Table 21 benchmark)."""
+    """Analytic KV/state cache size (paper Table 21 benchmark). With
+    batch=1 this is the per-slot unit of the serving admission budget."""
     cache = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
     return sum(int(np.prod(x.shape)) * x.dtype.itemsize
                for x in jax.tree.leaves(cache))

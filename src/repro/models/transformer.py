@@ -324,8 +324,10 @@ def prefill(cfg: ModelConfig, params: dict, tokens, *, enc=None,
 
 
 def decode_step(cfg: ModelConfig, params: dict, token, cache, pos):
-    """One autoregressive step. token: (B,1) int32; pos: () int32 (absolute
-    position of this token). Returns (logits (B,1,V), new_cache)."""
+    """One autoregressive step. token: (B,1) int32; pos: absolute position
+    of this token — () int32 with a monolithic cache (all sequences at one
+    position), or (B,) int32 with a slot cache (per-slot positions, the
+    continuous-batching engine). Returns (logits (B,1,V), new_cache)."""
     dt = jnp.dtype(cfg.compute_dtype)
     x = embed_tokens(params["embed"], token, dt)
     x, new_cache, _ = _stack_fwd(cfg, params, x, mode="decode", cache=cache,

@@ -1,0 +1,33 @@
+"""Fallback shims for environments without `hypothesis` installed.
+
+Property-based tests import ``given``/``settings``/``st`` through this
+module; when the real library is missing the decorated tests are skipped
+(instead of failing the whole module at collection time — the tier-1 suite
+must stay runnable on a bare CPU image).
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare images
+    HAVE_HYPOTHESIS = False
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    def given(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    class _Strategies:
+        """Stand-in for hypothesis.strategies: every strategy builder
+        returns None (never drawn from — the test is skipped)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

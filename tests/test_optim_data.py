@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data import ShardedLoader, ZipfMarkov, lm_batches
 from repro.optim import (adamw_init, adamw_update, cosine_schedule,
