@@ -13,10 +13,17 @@
                       FIXED cache byte budget — requests/s and p50/p99
                       latency vs number of NBL-linearized layers (the freed
                       KV budget converts into concurrent slots)
+  paged_throughput    paged vs ring KV management at EQUAL HBM budget on a
+                      short-prompt-heavy mix: the paged engine bills pages
+                      actually used instead of max_len rings, so it admits
+                      more concurrent requests — requests/s, decode sweeps
+                      (deterministic), pool utilization, p99 TTFT vs NBL-m
   kernels             µs/call of the three Pallas kernels (interpret mode —
                       CPU-emulated, structural check only)
 
-Prints ``name,value,derived`` CSV rows; also writes benchmarks/out.json.
+Prints ``name,value,derived`` CSV rows; writes benchmarks/out.json plus a
+stable per-scenario artifact benchmarks/out/<scenario>.json (one sorted
+rows list per scenario — the trajectory-tracking unit across PRs).
 """
 from __future__ import annotations
 
@@ -219,6 +226,72 @@ def bench_serving(fast: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+def bench_paged(fast: bool) -> None:
+    """Paged vs ring engine at EQUAL HBM budget (tentpole scenario): a
+    short-prompt-heavy mix where per-slot max_len rings strand most of their
+    reservation. The paged engine converts the stranded bytes into admitted
+    requests (requests/s up, decode sweeps down — the sweeps count is
+    deterministic) and composes with NBL: linearized layers carry no page
+    pool, so concurrency is monotone in m in BOTH engines but the paged one
+    starts from page-granular accounting."""
+    from repro.configs import get_config
+    from repro.core.surgery import nbl_variant
+    from repro.launch.engine import Engine
+    from repro.launch.scheduler import latency_stats
+    from repro.models import init_params
+    from repro.models.kv_cache import cache_bytes
+
+    cfg = get_config("tiny-dense")
+    max_len = 64
+    page_size = 8
+    budget = 2 * cache_bytes(cfg, 1, max_len)      # 2 full rings
+    n_req = 8 if fast else 16
+    max_new = 6
+    rng = np.random.default_rng(0)
+    lens = rng.integers(4, 13, n_req)              # short prompts: ~18 toks
+    expected = int(np.percentile(lens, 90)) + max_new
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lens]
+
+    for m in (0, 1, 2, 3):
+        c = nbl_variant(cfg, m)
+        params = init_params(jax.random.PRNGKey(0), c)
+        row = {}
+        for mode in ("ring", "paged"):
+            kw = dict(paged=True, page_size=page_size,
+                      expected_len=expected) if mode == "paged" else {}
+            eng = Engine(c, params, max_len=max_len,
+                         cache_budget_bytes=budget, **kw)
+            for p in prompts:                      # warmup: compile jits
+                eng.submit(p, max_new)
+            eng.run()
+            steps0 = eng.n_decode_steps
+            t0 = time.perf_counter()
+            rids = [eng.submit(p, max_new) for p in prompts]
+            eng.run()
+            dt = time.perf_counter() - t0
+            s = latency_stats([eng.finished[r] for r in rids])
+            row[mode] = (eng, dt, s, eng.n_decode_steps - steps0)
+            emit(f"paged/nbl-{m}/{mode}/concurrency", eng.n_slots,
+                 "equal_budget")
+            emit(f"paged/nbl-{m}/{mode}/requests_per_s",
+                 round(n_req / dt, 2))
+            emit(f"paged/nbl-{m}/{mode}/decode_sweeps",
+                 eng.n_decode_steps - steps0, "deterministic")
+            emit(f"paged/nbl-{m}/{mode}/p99_ttft_ms",
+                 round(s["p99_ttft_s"] * 1e3, 1))
+        eng_p = row["paged"][0]
+        emit(f"paged/nbl-{m}/pool_utilization",
+             round(eng_p.stats()["pool_utilization"], 3))
+        emit(f"paged/nbl-{m}/preemptions", eng_p.n_preemptions)
+        # structural claim, timing-free: page-granular admission never does
+        # WORSE than ring admission on the same budget
+        assert row["paged"][0].n_slots >= row["ring"][0].n_slots, \
+            (m, row["paged"][0].n_slots, row["ring"][0].n_slots)
+        assert row["paged"][3] <= row["ring"][3], "paged needs more sweeps"
+
+
+# ---------------------------------------------------------------------------
 def bench_kernels(fast: bool) -> None:
     from repro.kernels import ops
 
@@ -330,11 +403,28 @@ BENCHES = {
     "table21_kv_cache": bench_kv_cache,
     "criterion_ablation": bench_criterion_ablation,
     "serving_throughput": bench_serving,
+    "paged_throughput": bench_paged,
     "spec_decode": bench_speculative,
     "quant_compose": bench_quant_compose,
     "lora": bench_lora,
     "kernels": bench_kernels,
 }
+
+
+def write_scenario_artifact(name: str, rows: list) -> str:
+    """One stable JSON artifact per scenario under benchmarks/out/ — a
+    sorted rows list with a fixed schema, so successive PRs can diff the
+    same file path for trajectory tracking."""
+    outdir = os.path.join(os.path.dirname(__file__), "out")
+    os.makedirs(outdir, exist_ok=True)
+    path = os.path.join(outdir, f"{name}.json")
+    payload = {"scenario": name,
+               "rows": sorted(({"name": n, "value": v, "derived": d}
+                               for n, v, d in rows), key=lambda r: r["name"])}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def main() -> None:
@@ -345,7 +435,9 @@ def main() -> None:
     names = [args.only] if args.only else list(BENCHES)
     print("name,value,derived")
     for name in names:
+        start = len(ROWS)
         BENCHES[name](args.fast)
+        write_scenario_artifact(name, ROWS[start:])
     out = os.path.join(os.path.dirname(__file__), "out.json")
     with open(out, "w") as f:
         json.dump([{"name": n, "value": v, "derived": d}

@@ -238,6 +238,9 @@ SHAPES: dict[str, ShapeConfig] = {
     "decode_32k":  ShapeConfig("decode_32k",  "decode",  32_768,  128),
     # continuous-batching engine decode: 128 serving slots, per-slot pos
     "serve_32k":   ShapeConfig("serve_32k",   "serve",   32_768,  128),
+    # paged engine decode: page-pool cache + per-slot page table
+    "serve_paged_32k": ShapeConfig("serve_paged_32k", "serve_paged",
+                                   32_768, 128),
     "long_500k":   ShapeConfig("long_500k",   "decode",  524_288, 1),
 }
 

@@ -144,7 +144,19 @@ def batch_specs(tree: Any) -> Any:
 def cache_specs(tree: Any) -> Any:
     """KV/state caches. Layout (stack, batch, heads, time, hd) or
     (stack, batch, ...) for SSM state. Batch → dp; heads → model when
-    divisible, else the time/state dim → model (sequence-parallel decode)."""
+    divisible, else the time/state dim → model (sequence-parallel decode).
+
+    Paged pools (leaf names k_pages/v_pages: (L, n_pages, KV, page_size,
+    hd), models/paging.py) shard KV heads over "model" (head_dim fallback,
+    like the slot layout) and keep the PAGE dim replicated: the page table
+    indexes a global id space, and a dp-sharded pool would turn every
+    table-directed gather into a cross-replica collective."""
+    def one_paged(leaf):
+        s = shaped_spec(leaf.shape, None, None, "model", None, None)
+        if s[2] is None:
+            s = shaped_spec(leaf.shape, None, None, None, None, "model")
+        return s
+
     def one(leaf):
         if leaf.ndim == 5:        # (L, B, KV, T, hd)
             s = shaped_spec(leaf.shape, None, "dp", "model", None, None)
@@ -164,7 +176,14 @@ def cache_specs(tree: Any) -> Any:
         # other batch-led state: slot/batch dim -> dp, rest replicated
         return shaped_spec(leaf.shape,
                            *((None, "dp") + (None,) * (leaf.ndim - 2)))
-    return jax.tree.map(one, tree)
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for p, leaf in paths:
+        name = str(getattr(p[-1], "key", ""))
+        out.append(one_paged(leaf) if name in ("k_pages", "v_pages")
+                   else one(leaf))
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def zero1_specs(shapes_tree: Any, pspecs_tree: Any) -> Any:

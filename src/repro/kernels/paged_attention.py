@@ -1,0 +1,193 @@
+"""Paged-attention decode Pallas kernel (TPU target, interpret-validated).
+
+Single-token decode against the page-pool KV layout of models/paging.py:
+each serving slot's K/V live in fixed-size, position-aligned pages scattered
+through a per-layer pool, addressed by a per-slot page table.
+
+Grid (slot, kv_head, logical_page) with the page sweep innermost. The page
+table and per-slot lengths ride in as SCALAR-PREFETCH operands
+(pltpu.PrefetchScalarGridSpec), so the K/V BlockSpec index_maps read the
+*physical* page id for the current (slot, logical_page) cell and the
+pallas_call machinery DMAs exactly that page HBM->VMEM — the gather IS the
+block indexing, no materialized (B, T) copy. Running max/denominator/output
+accumulator persist in VMEM scratch across the page sweep (online softmax,
+same recurrence as kernels/flash_attention.py).
+
+Masking is positional: logical page l covers absolute positions
+[l*page_size, (l+1)*page_size); token t of slot b is valid iff
+t < lengths[b], plus the sliding-window predicate and an allocated-page
+check (unallocated table entries are clamped to page 0 by the index_map and
+killed by the mask). GQA (q heads grouped per kv head), sliding window and
+Gemma-2 logit soft-capping match kernels/flash_attention.py semantics.
+
+MXU alignment for real TPUs wants page_size a multiple of the sublane tile
+and head_dim padded to 128 lanes (ops.attention-style); interpret mode (this
+container) accepts the tiny test shapes as-is.
+
+``paged_decode`` is the call-site dispatcher: the Pallas kernel on TPU, the
+pure-XLA gather reference (``paged_decode_xla``) elsewhere — the kernel is
+validated against the reference in interpret mode by tests/test_paging.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale: float, window: Optional[int],
+            softcap: Optional[float], page_size: int, n_lpages: int):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (rep, hd)
+    k = k_ref[0, 0].astype(jnp.float32)              # (page_size, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    length = len_ref[b]                              # valid tokens (pos + 1)
+    t = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = (t < length) & (tbl_ref[b, p] >= 0)
+    if window is not None:
+        mask &= (length - 1 - t) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    pr = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + pr.sum(axis=1)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + jax.lax.dot(pr, v, preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(p == n_lpages - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    page_tbl: jax.Array, lengths: jax.Array, *,
+                    scale: Optional[float] = None,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, KV, rep, hd); k_pages/v_pages: (n_pages, KV, page_size, hd);
+    page_tbl: (B, n_lpages) int32 physical ids, -1 = unallocated;
+    lengths: (B,) int32 valid tokens per slot (query sits at lengths-1).
+    Returns (B, KV, rep, hd)."""
+    b, kvh, rep, hd = q.shape
+    n_pages, kvh2, page_size, _ = k_pages.shape
+    assert kvh == kvh2, (kvh, kvh2)
+    n_lpages = page_tbl.shape[1]
+    scale = hd ** -0.5 if scale is None else scale
+
+    kern = functools.partial(
+        _kernel, scale=scale, window=window, softcap=softcap,
+        page_size=page_size, n_lpages=n_lpages)
+
+    def kv_map(bi, hi, pi, tbl, lens):
+        # physical page for this (slot, logical page); clamp the -1 sentinel
+        # to page 0 — the kernel mask kills those positions.
+        return (jnp.maximum(tbl[bi, pi], 0), hi, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, n_lpages),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd),
+                         lambda bi, hi, pi, tbl, lens: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, hd), kv_map),
+            pl.BlockSpec((1, 1, page_size, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd),
+                               lambda bi, hi, pi, tbl, lens: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep,), jnp.float32),          # running max
+            pltpu.VMEM((rep,), jnp.float32),          # running denom
+            pltpu.VMEM((rep, hd), jnp.float32),       # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(page_tbl.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, v_pages)
+
+
+def paged_decode_xla(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     page_tbl: jax.Array, lengths: jax.Array, *,
+                     scale: Optional[float] = None,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None) -> jax.Array:
+    """Pure-XLA reference with identical masking semantics: gather pages via
+    the table, one softmax over the logical sequence. Same shapes as
+    ``paged_attention``; the serving path on non-TPU backends runs this."""
+    b, kvh, rep, hd = q.shape
+    n_pages, _, page_size, _ = k_pages.shape
+    n_lpages = page_tbl.shape[1]
+    scale = hd ** -0.5 if scale is None else scale
+
+    idx = jnp.clip(page_tbl, 0)                       # (B, P); mask kills -1
+    kg = k_pages[idx]                                 # (B, P, KV, ps, hd)
+    vg = v_pages[idx]
+    t_total = n_lpages * page_size
+    kg = kg.transpose(0, 2, 1, 3, 4).reshape(b, kvh, t_total, hd)
+    vg = vg.transpose(0, 2, 1, 3, 4).reshape(b, kvh, t_total, hd)
+
+    s = jnp.einsum("bgrd,bgtd->bgrt", q.astype(jnp.float32),
+                   kg.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    t = jnp.arange(t_total, dtype=jnp.int32)[None]        # (1, T)
+    ln = lengths.astype(jnp.int32)[:, None]               # (B, 1)
+    valid = (t < ln) & jnp.repeat(page_tbl >= 0, page_size, axis=1)
+    if window is not None:
+        valid &= (ln - 1 - t) < window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+
+    m = s.max(axis=-1, keepdims=True)
+    pr = jnp.exp(s - m)
+    denom = jnp.maximum(pr.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bgrt,bgtd->bgrd", (pr / denom),
+                     vg.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def paged_decode(q, k_pages, v_pages, page_tbl, lengths, *,
+                 scale: Optional[float] = None, window: Optional[int] = None,
+                 softcap: Optional[float] = None,
+                 use_kernel: Optional[bool] = None) -> jax.Array:
+    """Backend dispatcher: Mosaic kernel on TPU, XLA gather reference
+    elsewhere (interpret-mode kernel execution is test-only — it is far
+    slower than the XLA path for the serving loop)."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        return paged_attention(q, k_pages, v_pages, page_tbl, lengths,
+                               scale=scale, window=window, softcap=softcap)
+    return paged_decode_xla(q, k_pages, v_pages, page_tbl, lengths,
+                            scale=scale, window=window, softcap=softcap)

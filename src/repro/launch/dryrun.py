@@ -83,11 +83,22 @@ def build_target(cfg, shape):
 
     # decode/serve: one new token per sequence against a seq_len KV cache.
     # "serve" is the engine's batched slot-decode: pos is a per-slot (B,)
-    # vector sharded with the slot dim; "decode" keeps the scalar pos.
-    def serve_step(params, token, cache, pos):
-        return decode_step(cfg, params, token, cache, pos)
+    # vector sharded with the slot dim; "decode" keeps the scalar pos;
+    # "serve_paged" decodes against page pools via a per-slot page table.
     cspecs = cache_specs(ins["cache"])
     pos_spec = shaped_spec(ins["pos"].shape, "dp") if ins["pos"].ndim else P()
+    if shape.kind == "serve_paged":
+        def paged_step(params, token, cache, pos, tbl):
+            return decode_step(cfg, params, token, cache, pos, page_tbl=tbl)
+        args = (pshapes, ins["token"], ins["cache"], ins["pos"],
+                ins["page_tbl"])
+        shardings = (pspecs, shaped_spec(ins["token"].shape, "dp", None),
+                     cspecs, pos_spec,
+                     shaped_spec(ins["page_tbl"].shape, "dp", None))
+        return paged_step, args, shardings, shape.global_batch, False
+
+    def serve_step(params, token, cache, pos):
+        return decode_step(cfg, params, token, cache, pos)
     args = (pshapes, ins["token"], ins["cache"], ins["pos"])
     shardings = (pspecs, shaped_spec(ins["token"].shape, "dp", None),
                  cspecs, pos_spec)
@@ -114,7 +125,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, nbl_m: int = 0,
             donate_args = ()
             if donate and shape.kind == "train":
                 donate_args = (0, 1)
-            elif donate and shape.kind in ("decode", "serve"):
+            elif donate and shape.kind in ("decode", "serve", "serve_paged"):
                 donate_args = (2,)
             lowered = jax.jit(fn, in_shardings=jit_shardings(shardings),
                               donate_argnums=donate_args).lower(*args)

@@ -1,33 +1,54 @@
-"""Continuous-batching serving engine over a slot-indexed KV cache.
+"""Continuous-batching serving engine over slot-indexed or PAGED KV caches.
 
-Architecture (scheduler → engine → slot cache):
+Architecture (scheduler → engine → cache):
 
   Scheduler (launch/scheduler.py)
-      FIFO queue + NBL-aware slot budget: a fixed HBM byte budget divided
-      by the per-request cache footprint. NBL-linearized layers carry no
+      FIFO queue + NBL-aware admission budget: a fixed HBM byte budget
+      divided by the per-request footprint. NBL-linearized layers carry no
       cache, so a compressed model admits more concurrent requests on the
       same budget (paper §4.2).
   Engine (this module)
-      Owns params + one slot cache (models/kv_cache.init_slot_cache).
-      ``step()`` interleaves: (1) admission — for every free slot, pop a
-      request, prefill it at batch=1, ``assign_slot`` its cache into the
-      free row, emit its first token; (2) one *batched* decode over all
-      slots with a per-slot position vector — retired/empty rows ride
-      along masked by their kpos = -1 (models/attention.decode_attention);
-      (3) retirement — EOS or max-token requests release their slot.
-      Reassignment (``assign_slot``) overwrites every cache leaf's slot
-      row wholesale, so a recycled slot can never read stale KV; between
-      tenancies the dead row's decode output is simply discarded.
-      ``models/kv_cache.reset_slot`` remains available for explicitly
-      scrubbing a retired slot's state.
-  Slot cache (models/kv_cache.py)
-      (L, n_slots, ...) leaves; per-slot `kpos` position rows.
+      Owns params + ONE cache in one of two layouts:
+
+      ring (default)   models/kv_cache.init_slot_cache — a full max_len
+                       ring reserved per slot. Budget unit: bytes/slot.
+      paged            models/paging.init_paged_cache — per-layer page
+                       pools + a host-side PageAllocator and page table.
+                       A request owns only the pages its tokens cover;
+                       pages are allocated ON DEMAND as decode crosses a
+                       page boundary, and when the pool runs dry the
+                       YOUNGEST in-flight request is preempted (pages
+                       freed, request requeued — it restarts from its
+                       prompt) so the oldest requests always finish.
+                       Budget unit: pages (scheduler.nbl_page_budget) —
+                       short requests stop stranding max_len-sized rings,
+                       which converts directly into admitted traffic.
+
+      ``step()`` interleaves: (1) admission — for every free slot (and, when
+      paged, enough free pages), pop a request, prefill it at batch=1,
+      assign its cache (slot row / prompt pages), emit its first token;
+      (2) one *batched* decode over all slots with a per-slot position
+      vector — retired/empty rows ride along masked (kpos = -1, or an
+      unallocated page-table row); (3) retirement — EOS or max-token
+      requests release their slot (and pages, copy-free: isolation under
+      reuse is positional, see models/paging.py).
+  Cache
+      (L, n_slots, ...) slot rows, or (L, n_pages, KV, page_size, hd)
+      pools + host page table (models/paging.py).
+
+Prompt-length BUCKETING bounds the per-length prefill jits: prompts are
+right-padded to the next power-of-two bucket and prefill takes a traced
+``valid_len`` (logits read at valid_len-1; padded cache positions are
+masked unattendable), so the jit cache holds O(log max_len) entries instead
+of one per distinct length. Bucketing is auto-disabled for stacks it cannot
+serve exactly: SSM/hybrid (padding corrupts the scanned state) and, in ring
+mode only, sliding-window attention (padding evicts in-window ring slots;
+the paged layout is position-aligned, so windows and bucketing compose).
 
 The decode jit compiles ONCE (shapes are (n_slots, 1) regardless of how
-many requests are in flight); prefill compiles once per distinct prompt
-length (bucket prompts client-side if that matters). Under a mesh the same
-engine runs sharded: params/caches take their production PartitionSpecs
-(distributed/sharding.py), batch/slot dims shard over "dp".
+many requests are in flight). Under a mesh the same engine runs sharded:
+params/caches take their production PartitionSpecs (distributed/
+sharding.py), batch/slot dims shard over "dp".
 """
 from __future__ import annotations
 
@@ -42,18 +63,33 @@ from repro.configs.base import ModelConfig
 from repro.distributed.api import jit_shardings, mesh_axes, shaped_spec
 from repro.distributed.sharding import cache_specs, param_specs
 from repro.launch.scheduler import (
-    Request, Scheduler, latency_stats, nbl_slot_budget,
+    Request, Scheduler, latency_stats, nbl_page_budget, nbl_slot_budget,
 )
 from repro.models import decode_step, prefill
 from repro.models.kv_cache import assign_slot, init_slot_cache
+from repro.models.paging import (
+    DEFAULT_PAGE_SIZE, PageAllocator, assign_pages, build_page_table,
+    init_paged_cache, n_caching_attn_layers, pages_per_seq,
+    pool_pages_for_budget,
+)
+
+
+def _pow2_ceil(n: int) -> int:
+    return 1 << max(0, (int(n) - 1).bit_length())
 
 
 class Engine:
     """Request-level continuous-batching decode engine.
 
     Either ``n_slots`` or ``cache_budget_bytes`` (NBL-aware: converted via
-    ``nbl_slot_budget``) fixes the concurrency; given both, the budget is a
-    ceiling. ``max_len`` bounds prompt + generated tokens per request.
+    ``nbl_slot_budget`` / ``nbl_page_budget``) fixes the concurrency; given
+    both, the budget is a ceiling. ``max_len`` bounds prompt + generated
+    tokens per request.
+
+    ``paged=True`` switches to the page-pool cache layout; ``page_size``
+    must then be a power of two. ``expected_len`` is the page budget's
+    per-request billing length (default ``max_len`` — conservative; pass
+    the workload's typical prompt+generation length to admit more).
 
     Sharding is captured at CONSTRUCTION time: build the engine inside
     ``use_mesh(mesh)`` to get sharded params/caches — an engine built
@@ -66,9 +102,29 @@ class Engine:
                  eos_id: Optional[int] = None,
                  temperature: float = 0.0, seed: int = 0,
                  scheduler: Optional[Scheduler] = None,
-                 donate: bool = True):
+                 donate: bool = True,
+                 paged: bool = False,
+                 page_size: int = DEFAULT_PAGE_SIZE,
+                 expected_len: Optional[int] = None,
+                 bucket_prompts: bool = True):
+        self.paged = bool(paged)
+        self.page_size = int(page_size)
+        if self.paged and self.page_size & (self.page_size - 1):
+            raise ValueError(f"page_size must be a power of two, "
+                             f"got {page_size}")
+        expected_len = int(expected_len or max_len)
+
+        n_pages = None
         if cache_budget_bytes is not None:
-            budget_slots = nbl_slot_budget(cfg, cache_budget_bytes, max_len)
+            if self.paged:
+                n_pages = pool_pages_for_budget(cfg, cache_budget_bytes,
+                                                self.page_size)
+                budget_slots = nbl_page_budget(
+                    cfg, cache_budget_bytes, page_size=self.page_size,
+                    expected_len=expected_len)
+            else:
+                budget_slots = nbl_slot_budget(cfg, cache_budget_bytes,
+                                               max_len)
             # an explicit n_slots may narrow the budget, never exceed it
             n_slots = budget_slots if n_slots is None \
                 else min(n_slots, budget_slots)
@@ -85,13 +141,51 @@ class Engine:
         self._rng = np.random.default_rng(seed)
         self.scheduler = scheduler or Scheduler()
 
-        self.cache = init_slot_cache(cfg, self.n_slots, self.max_len)
+        blocks = cfg.blocks()
+        has_mamba = any(b.kind == "mamba" for b in blocks)
+        has_window = any(b.kind == "attn" and b.window is not None
+                         for b in blocks)
+        # exactness gates (see module docstring): SSM state is corrupted by
+        # padded tokens; ring compaction evicts in-window slots on padding.
+        self.bucket_prompts = (bool(bucket_prompts) and not has_mamba
+                               and (self.paged or not has_window))
+
+        if self.paged:
+            # pure sliding-window stacks can retire pages that fall out of
+            # the window (the paged analogue of the ring's compaction): a
+            # page is dead once it is below EVERY layer's window, so the
+            # horizon is the widest window — and one global layer pins
+            # everything (no release).
+            windows = [b.window for b in blocks if b.kind == "attn"]
+            self._page_window = (max(windows) if windows
+                                 and all(w is not None for w in windows)
+                                 else None)
+            self._pps = pages_per_seq(self.max_len, self.page_size)
+            if n_pages is None:
+                n_pages = self.n_slots * self._pps   # full-reservation pool
+            # a lone request must always be able to run to max_len
+            if n_caching_attn_layers(cfg) > 0:
+                n_pages = max(int(n_pages), self._pps)
+            self.n_pages = int(n_pages)
+            self.allocator = PageAllocator(self.n_pages)
+            self.page_tbl = build_page_table(self.n_slots, self.max_len,
+                                             self.page_size)
+            self.slot_pages: list[list[int]] = [[] for _ in
+                                                range(self.n_slots)]
+            self.cache = init_paged_cache(cfg, self.n_slots, self.max_len,
+                                          page_size=self.page_size,
+                                          n_pages=self.n_pages)
+        else:
+            self.n_pages = 0
+            self.cache = init_slot_cache(cfg, self.n_slots, self.max_len)
         self.slot_req: list[Optional[Request]] = [None] * self.n_slots
         self.slot_pos = np.zeros(self.n_slots, np.int32)   # pos of last tok
         self.slot_tok = np.zeros(self.n_slots, np.int32)   # last emitted tok
         self.finished: dict[int, Request] = {}
         self.n_decode_steps = 0
         self.n_prefills = 0
+        self.n_preemptions = 0
+        self._pool_in_use_sum = 0      # allocator occupancy, per decode step
 
         sharded = bool(mesh_axes())
         pspecs = param_specs(jax.eval_shape(lambda: params)) \
@@ -99,21 +193,26 @@ class Engine:
         cspecs = cache_specs(jax.eval_shape(lambda: self.cache)) \
             if sharded else None
 
-        def _decode(p, token, cache, pos):
-            return decode_step(cfg, p, token, cache, pos)
+        dkw = dict(donate_argnums=(2,)) if donate else {}
+        akw = dict(donate_argnums=(0,)) if donate else {}
+        if self.paged:
+            def _decode(p, token, cache, pos, tbl):
+                return decode_step(cfg, p, token, cache, pos, page_tbl=tbl)
+        else:
+            def _decode(p, token, cache, pos):
+                return decode_step(cfg, p, token, cache, pos)
 
         def _assign(slot_cache, pcache, slot):
             return assign_slot(slot_cache, pcache, slot)
 
-        dkw = dict(donate_argnums=(2,)) if donate else {}
-        akw = dict(donate_argnums=(0,)) if donate else {}
         if sharded:
             tok_spec = shaped_spec((self.n_slots, 1), "dp", None)
             pos_spec = shaped_spec((self.n_slots,), "dp")
+            din = (pspecs, tok_spec, cspecs, pos_spec)
+            if self.paged:
+                din += (shaped_spec((self.n_slots, self._pps), "dp", None),)
             self._decode_jit = jax.jit(
-                _decode,
-                in_shardings=jit_shardings((pspecs, tok_spec, cspecs,
-                                            pos_spec)),
+                _decode, in_shardings=jit_shardings(din),
                 out_shardings=jit_shardings((None, cspecs)), **dkw)
             self._assign_jit = jax.jit(
                 _assign, in_shardings=jit_shardings((cspecs, None, None)),
@@ -121,15 +220,14 @@ class Engine:
         else:
             self._decode_jit = jax.jit(_decode, **dkw)
             self._assign_jit = jax.jit(_assign, **akw)
+        self._akw, self._cspecs = akw, cspecs
         # under a mesh the batch=1 prefill cache must come out in the same
-        # production layout the slot cache uses, so _assign_jit never
+        # production layout the slot cache uses, so assignment never
         # reshards on admission.
         self._pspecs = pspecs
-        self._pcspecs = None
-        if sharded:
-            from repro.launch.specs import cache_shapes
-            self._pcspecs = cache_specs(cache_shapes(cfg, 1, self.max_len))
-        self._prefill_jits: dict = {}   # (prompt_len, with_enc) -> jit fn
+        self._sharded = sharded
+        self._prefill_jits: dict = {}   # (bucket, with_enc) -> jit fn
+        self._assign_paged_jits: dict = {}   # prefill cache_len -> jit fn
 
     # ------------------------------------------------------------- admin --
 
@@ -152,22 +250,71 @@ class Engine:
 
     # ----------------------------------------------------------- serving --
 
-    def _prefill_fn(self, prompt_len: int, with_enc: bool):
-        key = (prompt_len, with_enc)
+    def _prefill_plan(self, prompt_len: int) -> tuple[int, int, bool]:
+        """(token_len, cache_len, masked) for a prompt. Bucketing pads the
+        TOKENS to a power-of-two bucket and masks with valid_len; without
+        it, tokens stay exact (mamba-safe) and only the paged CACHE length
+        rounds up to a page multiple (pages tile the cache)."""
+        if self.bucket_prompts:
+            b = _pow2_ceil(prompt_len)
+            if self.paged:
+                b = min(max(b, self.page_size), self._pps * self.page_size)
+            else:
+                b = min(b, self.max_len)
+            return b, (b if self.paged else self.max_len), True
+        if self.paged:
+            cl = pages_per_seq(prompt_len, self.page_size) * self.page_size
+            return prompt_len, cl, False
+        return prompt_len, self.max_len, False
+
+    def _prefill_fn(self, token_len: int, cache_len: int, masked: bool,
+                    with_enc: bool):
+        """Jit cache keyed on the full prefill plan — the plan is computed
+        once per admission in ``_admit`` and passed through, so the cached
+        function can never disagree with the caller about cache width or
+        padding masking."""
+        key = (token_len, cache_len, masked, with_enc)
         fn = self._prefill_jits.get(key)
         if fn is None:
-            cfg, max_len = self.cfg, self.max_len
+            cfg, paged = self.cfg, self.paged
 
-            def _prefill(p, tokens, enc=None):
-                return prefill(cfg, p, tokens, enc=enc, cache_len=max_len)
+            def _prefill(p, tokens, valid_len, enc=None):
+                return prefill(cfg, p, tokens, enc=enc, cache_len=cache_len,
+                               paged=paged,
+                               valid_len=valid_len if masked else None)
 
             kw = {}
-            if self._pcspecs is not None:
-                ins = (self._pspecs, None) + ((None,) if with_enc else ())
+            if self._sharded:
+                from repro.launch.specs import cache_shapes
+                # prefill returns the POSITION-ALIGNED batch=1 layout even
+                # when paged; its specs are the plain cache ones
+                pcspecs = cache_specs(cache_shapes(cfg, 1, cache_len))
+                ins = (self._pspecs, None, None) + \
+                    ((None,) if with_enc else ())
                 kw = dict(in_shardings=jit_shardings(ins),
-                          out_shardings=jit_shardings((None, self._pcspecs)))
+                          out_shardings=jit_shardings((None, pcspecs)))
             fn = jax.jit(_prefill, **kw)
             self._prefill_jits[key] = fn
+        return fn
+
+    def _assign_paged_fn(self, cache_len: int):
+        fn = self._assign_paged_jits.get(cache_len)
+        if fn is None:
+            cfg, ps = self.cfg, self.page_size
+
+            def _assign(cache, pcache, slot, page_ids):
+                return assign_pages(cfg, cache, pcache, slot, page_ids,
+                                    page_size=ps)
+
+            kw = dict(self._akw)
+            if self._sharded:
+                from repro.launch.specs import cache_shapes
+                pcspecs = cache_specs(cache_shapes(cfg, 1, cache_len))
+                kw.update(in_shardings=jit_shardings(
+                    (self._cspecs, pcspecs, None, None)),
+                    out_shardings=jit_shardings(self._cspecs))
+            fn = jax.jit(_assign, **kw)
+            self._assign_paged_jits[cache_len] = fn
         return fn
 
     def _sample(self, logits_row: np.ndarray) -> int:
@@ -188,26 +335,121 @@ class Engine:
         done = (len(req.tokens) >= req.max_new
                 or (self.eos_id is not None and tok == self.eos_id))
         if done:
-            # no cache scrub needed: assign_slot overwrites the full slot
-            # row at the next tenancy, and dead rows are never read.
+            # no cache scrub needed: ring rows are overwritten wholesale at
+            # the next tenancy; freed pages are position-masked until the
+            # next owner overwrites them (models/paging.py).
             req.t_finish = now
             self.finished[req.rid] = req
             self.slot_req[slot] = None
+            if self.paged:
+                self._release_pages(slot)
+
+    def _release_pages(self, slot: int) -> None:
+        if self.slot_pages[slot]:
+            self.allocator.free(self.slot_pages[slot])
+            self.slot_pages[slot] = []
+        self.page_tbl[slot, :] = -1
+
+    def _preempt(self, slot: int) -> None:
+        """Evict the request in ``slot`` mid-decode: free its pages and send
+        it back to the queue front. It restarts from its prompt — generated
+        tokens are discarded and the TTFT clock rewinds to unserved."""
+        req = self.slot_req[slot]
+        assert req is not None
+        self._release_pages(slot)
+        self.slot_req[slot] = None
+        req.tokens = []
+        req.t_first = 0.0
+        req.t_admit = 0.0
+        self.scheduler.requeue(req)
+        self.n_preemptions += 1
+
+    def _youngest_active(self) -> int:
+        return max(self.active_slots,
+                   key=lambda s: self.slot_req[s].t_admit)
+
+    def _release_window_pages(self, slot: int, pos: int) -> None:
+        """Free this slot's pages that sit entirely below the attention
+        horizon (positions < pos - window + 1): the decode mask can provably
+        never read them, so the -1 table entry and the window predicate
+        coincide — token output is unchanged (asserted by the paged SWA
+        parity test) while the pool stops pinning O(len) pages per
+        request."""
+        horizon = pos - self._page_window + 1
+        n_dead = max(0, min(horizon // self.page_size, self._pps))
+        dead = [int(p) for p in self.page_tbl[slot, :n_dead] if p >= 0]
+        if dead:
+            self.allocator.free(dead)
+            self.page_tbl[slot, :n_dead] = -1
+            gone = set(dead)
+            self.slot_pages[slot] = [p for p in self.slot_pages[slot]
+                                     if p not in gone]
+
+    def _ensure_decode_pages(self) -> None:
+        """Allocate the page each active slot's next write lands in; on a
+        dry pool, preempt the youngest request until the fault is served
+        (freeing >= 1 page per preemption, so this terminates)."""
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is None:
+                continue
+            if self._page_window is not None:
+                self._release_window_pages(slot, int(self.slot_pos[slot]))
+            lp = int(self.slot_pos[slot]) // self.page_size
+            if self.page_tbl[slot, lp] >= 0:
+                continue
+            while self.slot_req[slot] is not None:
+                ids = self.allocator.alloc(1)
+                if ids is not None:
+                    self.page_tbl[slot, lp] = ids[0]
+                    self.slot_pages[slot].append(ids[0])
+                    break
+                self._preempt(self._youngest_active())
 
     def _admit(self, req: Request, slot: int) -> None:
         now = time.monotonic()
         req.t_admit = now
-        fn = self._prefill_fn(len(req.prompt), req.enc is not None)
-        tokens = jnp.asarray(req.prompt, jnp.int32)[None]
-        args = (self.params, tokens) + (
+        plen = len(req.prompt)
+        token_len, cache_len, masked = self._prefill_plan(plen)
+        tokens = np.zeros(token_len, np.int32)
+        tokens[:plen] = req.prompt
+        fn = self._prefill_fn(token_len, cache_len, masked,
+                              req.enc is not None)
+        args = (self.params, jnp.asarray(tokens)[None],
+                jnp.int32(plen)) + (
             (jnp.asarray(req.enc)[None],) if req.enc is not None else ())
         logits, pcache = fn(*args)
         self.n_prefills += 1
-        self.cache = self._assign_jit(self.cache, pcache, jnp.int32(slot))
+        if self.paged:
+            npg = pages_per_seq(plen, self.page_size)
+            ids = self.allocator.alloc(npg)
+            assert ids is not None, "admission checked page availability"
+            self.page_tbl[slot, :npg] = ids
+            self.slot_pages[slot] = list(ids)
+            afn = self._assign_paged_fn(cache_len)
+            self.cache = afn(self.cache, pcache, jnp.int32(slot),
+                             jnp.asarray(self.page_tbl[slot]))
+        else:
+            self.cache = self._assign_jit(self.cache, pcache,
+                                          jnp.int32(slot))
         self.slot_req[slot] = req
-        self.slot_pos[slot] = len(req.prompt)     # position of its 1st token
+        self.slot_pos[slot] = plen               # position of its 1st token
         tok = self._sample(np.asarray(logits[0, -1], np.float32))
         self._emit(req, slot, tok, time.monotonic())
+
+    def _can_admit(self, req: Request) -> bool:
+        """Paged admission gate: the prompt's pages must be free, plus one
+        page of headroom per in-flight request (each may fault a page on
+        the next boundary — admitting into that reserve would just trade
+        the admission for a preemption). A page-aligned prompt faults a
+        fresh page on its very first decode write, so it counts in the
+        reserve too."""
+        if not self.paged:
+            return True
+        plen = len(req.prompt)
+        npg = pages_per_seq(plen, self.page_size)
+        own_fault = 1 if plen % self.page_size == 0 else 0
+        return self.allocator.free_pages >= (npg + own_fault
+                                             + len(self.active_slots))
 
     def step(self) -> int:
         """One engine iteration: admit into free slots, then one batched
@@ -215,22 +457,37 @@ class Engine:
         first-tokens included)."""
         free = [i for i, r in enumerate(self.slot_req) if r is None]
         emitted = 0
-        for req in self.scheduler.admit(len(free)):
+        pending = self.scheduler.admit(len(free))
+        while pending:
+            req = pending.pop(0)
+            if not self._can_admit(req):
+                for r in reversed([req] + pending):   # restore FIFO order
+                    self.scheduler.requeue(r)
+                break
             self._admit(req, free.pop())
             emitted += 1                       # prefill emits a first token
 
+        if self.paged:
+            self._ensure_decode_pages()
         active = self.active_slots
         if not active:
             return emitted
         token = jnp.asarray(self.slot_tok[:, None])
         pos = jnp.asarray(self.slot_pos)
-        logits, self.cache = self._decode_jit(self.params, token,
-                                              self.cache, pos)
+        if self.paged:
+            logits, self.cache = self._decode_jit(
+                self.params, token, self.cache, pos,
+                jnp.asarray(self.page_tbl))
+            self._pool_in_use_sum += self.allocator.in_use
+        else:
+            logits, self.cache = self._decode_jit(self.params, token,
+                                                  self.cache, pos)
         self.n_decode_steps += 1
         rows = np.asarray(logits[:, -1], np.float32)
         now = time.monotonic()
         for slot in active:
             req = self.slot_req[slot]
+            assert req is not None             # snapshot taken post-preempt
             self.slot_pos[slot] += 1
             self._emit(req, slot, self._sample(rows[slot]), now)
             emitted += 1
@@ -251,4 +508,13 @@ class Engine:
         s = latency_stats(list(self.finished.values()))
         s.update(n_slots=self.n_slots, n_decode_steps=self.n_decode_steps,
                  n_prefills=self.n_prefills)
+        if self.paged:
+            s.update(
+                n_pages=self.n_pages,
+                n_preemptions=self.n_preemptions,
+                pages_in_use=self.allocator.in_use,
+                peak_pages_in_use=self.allocator.peak_in_use,
+                pool_utilization=(self._pool_in_use_sum
+                                  / max(1, self.n_decode_steps)
+                                  / max(1, self.n_pages)))
         return s

@@ -5,19 +5,33 @@ decides *how many* requests may be in flight; ``launch/engine.py`` owns the
 slot-indexed KV cache (models/kv_cache.py) and moves admitted requests
 through prefill → batched decode → retirement, recycling the freed slot.
 
-NBL-aware admission budget
---------------------------
-The number of concurrent slots is derived from an HBM byte budget:
+NBL-aware admission budgets
+---------------------------
+The number of concurrent requests is derived from an HBM byte budget, in
+one of two units:
+
+ring (slot) budget — one full-length cache ring reserved per request:
 
     per_slot = cache_bytes(cfg, batch=1, max_len)      # one request's state
     n_slots  = clamp(budget_bytes // per_slot, 1, max_slots)
 
-NBL-linearized layers carry NO cache (kv_cache.py), so compressing m of K
-attention layers shrinks ``per_slot`` by ≈ m/K (paper §4.2, Table 21) and
-the same budget admits ≈ K/(K−m)× more concurrent requests. This is the
-mechanism that converts NBL's freed serve-state into served traffic — the
-throughput benchmark (benchmarks/run.py serving_throughput) measures
-requests/s rising monotonically with m at a fixed budget.
+page budget — the paged engine (models/paging.py) reserves nothing up
+front; the pool is sized in pages and a request is billed only the pages an
+*expected* generation length actually covers:
+
+    pool_pages  = budget_bytes // (caching_layers * page_bytes)
+    per_request = ceil(expected_len / page_size)        # per layer, but
+                                                        # allocation is
+                                                        # layer-synchronized
+    n_requests  = clamp(pool_pages // per_request, 1, max_slots)
+
+NBL-linearized layers carry NO cache (kv_cache.py) and NO page pool, so
+compressing m of K attention layers shrinks the per-request bill by ≈ m/K
+(paper §4.2, Table 21) in BOTH units — and in the paged unit it composes
+multiplicatively with page granularity: fewer caching layers × only-used
+pages. The throughput benchmarks (serving_throughput / paged_throughput in
+benchmarks/run.py) measure requests/s rising monotonically with m at a
+fixed budget, and paged >= ring on short-prompt mixes.
 """
 from __future__ import annotations
 
@@ -66,6 +80,26 @@ def nbl_slot_budget(cfg: ModelConfig, budget_bytes: int, max_len: int,
     return int(max(1, min(max_slots, budget_bytes // per_slot)))
 
 
+def nbl_page_budget(cfg: ModelConfig, budget_bytes: int, *, page_size: int,
+                    expected_len: int, max_slots: int = 256) -> int:
+    """Concurrent-request count a byte budget buys under PAGED allocation.
+
+    The budget is converted to a per-layer pool size (pages) across the
+    stack's caching attention layers, then divided by the pages one request
+    of ``expected_len`` tokens occupies. Linearized (nbl/drop) layers
+    contribute zero to the page bill, so the count is monotone in NBL-m;
+    stacks with no caching attention at all clamp to ``max_slots``. Note
+    the unit covers attention KV only — O(1)-per-slot SSM/conv/cross state
+    is not paged (models/paging.py) and is negligible at serving lengths.
+    """
+    from repro.models.paging import pages_per_seq, pool_pages_for_budget
+    pool = pool_pages_for_budget(cfg, budget_bytes, page_size)
+    if pool is None:
+        return max_slots
+    per_req = pages_per_seq(max(1, expected_len), page_size)
+    return int(max(1, min(max_slots, pool // per_req)))
+
+
 class Scheduler:
     """FIFO admission queue with a per-step prefill cap.
 
@@ -101,24 +135,43 @@ class Scheduler:
         n = min(free_slots, self.max_prefill_per_step, len(self.queue))
         return [self.queue.popleft() for _ in range(n)]
 
+    def requeue(self, req: Request) -> None:
+        """Return a request to the FRONT of the queue (admission deferred
+        for lack of pages, or preempted mid-decode — it restarts from its
+        prompt, so any generated tokens must have been discarded)."""
+        self.queue.appendleft(req)
+
     def __len__(self) -> int:
         return len(self.queue)
 
 
 def latency_stats(requests: list[Request]) -> dict:
-    """requests/s + latency percentiles over a finished request set."""
+    """requests/s + latency/TTFT percentiles + per-request decode speed over
+    a finished request set. Tail TTFT (p99) and per-request decode tokens/s
+    are the evidence the paged-vs-ring comparison needs: paging admits more
+    requests (better tail TTFT) at the possible cost of preemption restarts
+    (visible as decode-rate outliers)."""
     done = [r for r in requests if r.t_finish > 0]
     if not done:
         return {"n": 0}
     lat = np.array([r.latency for r in done])
     ttft = np.array([r.ttft for r in done])
+    # decode rate excludes the prefill-emitted first token; requests that
+    # finished at their first token have no decode phase to rate.
+    dec = np.array([(len(r.tokens) - 1) / max(r.t_finish - r.t_first, 1e-9)
+                    for r in done if len(r.tokens) > 1])
     span = (max(r.t_finish for r in done)
             - min(r.t_submit for r in done)) or 1e-9
-    return {
+    out = {
         "n": len(done),
         "requests_per_s": len(done) / span,
         "tokens_per_s": sum(len(r.tokens) for r in done) / span,
         "p50_latency_s": float(np.percentile(lat, 50)),
         "p99_latency_s": float(np.percentile(lat, 99)),
         "p50_ttft_s": float(np.percentile(ttft, 50)),
+        "p99_ttft_s": float(np.percentile(ttft, 99)),
     }
+    if dec.size:
+        out["decode_tok_s_p50"] = float(np.percentile(dec, 50))
+        out["decode_tok_s_min"] = float(dec.min())
+    return out

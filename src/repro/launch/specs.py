@@ -2,6 +2,8 @@
 against these (weak-type-correct, shardable, no device allocation)."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
@@ -27,14 +29,28 @@ def slot_cache_shapes(cfg: ModelConfig, n_slots: int, max_len: int):
     return jax.eval_shape(lambda: init_slot_cache(cfg, n_slots, max_len))
 
 
+def paged_cache_shapes(cfg: ModelConfig, n_slots: int, max_len: int, *,
+                       page_size: Optional[int] = None,
+                       n_pages: Optional[int] = None):
+    """Paged serving cache: per-layer page pools + slot-state rows
+    (models/paging.py) — the paged engine's decode state."""
+    from repro.models.paging import DEFAULT_PAGE_SIZE, init_paged_cache
+    ps = page_size or DEFAULT_PAGE_SIZE
+    return jax.eval_shape(lambda: init_paged_cache(
+        cfg, n_slots, max_len, page_size=ps, n_pages=n_pages))
+
+
 def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
     """Inputs for the step function selected by ``shape.kind``:
 
-      train    -> {"batch": {tokens, labels[, enc]}}
-      prefill  -> {"tokens"[, "enc"]}
-      decode   -> {"token", "pos", "cache"}   (cache at shape.seq_len)
-      serve    -> {"token", "pos", "cache"}   (slot cache; pos is a per-slot
-                  (B,) vector — the engine's batched decode step)
+      train       -> {"batch": {tokens, labels[, enc]}}
+      prefill     -> {"tokens"[, "enc"]}
+      decode      -> {"token", "pos", "cache"}   (cache at shape.seq_len)
+      serve       -> {"token", "pos", "cache"}   (slot cache; pos is a
+                     per-slot (B,) vector — the engine's batched decode)
+      serve_paged -> {"token", "pos", "page_tbl", "cache"}   (page-pool
+                     cache sized for full reservation; page_tbl maps each
+                     slot's logical pages to physical pool pages)
     """
     b, s = shape.global_batch, shape.seq_len
     dt = jnp.dtype(cfg.compute_dtype)
@@ -57,4 +73,11 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
         return {"token": sds((b, 1), jnp.int32),
                 "pos": sds((b,), jnp.int32),
                 "cache": slot_cache_shapes(cfg, b, s)}
+    if shape.kind == "serve_paged":
+        from repro.models.paging import DEFAULT_PAGE_SIZE, pages_per_seq
+        pps = pages_per_seq(s, DEFAULT_PAGE_SIZE)
+        return {"token": sds((b, 1), jnp.int32),
+                "pos": sds((b,), jnp.int32),
+                "page_tbl": sds((b, pps), jnp.int32),
+                "cache": paged_cache_shapes(cfg, b, s)}
     raise ValueError(shape.kind)

@@ -307,6 +307,56 @@ def decode_attention(cfg, p: dict, x: jax.Array, cache: dict, pos: jax.Array,
     return out @ p["wo"], {"k": k, "v": v, "kpos": kpos}
 
 
+def decode_paged_attention(cfg, p: dict, x: jax.Array, cache: dict,
+                           pos: jax.Array, page_tbl: jax.Array, *,
+                           window: Optional[int]) -> tuple[jax.Array, dict]:
+    """Single-token decode against the paged KV layout (models/paging.py).
+
+    x: (B, 1, d); cache: {k_pages, v_pages: (n_pages, KV, page_size, hd)};
+    pos: (B,) per-slot absolute position of the token being decoded;
+    page_tbl: (B, n_lpages) int32 physical page per logical page, -1 =
+    unallocated. The new K/V is scattered into page pos//page_size at
+    offset pos%page_size (mode="drop" skips slots whose table entry is
+    unallocated — i.e. inactive rows riding along in the batch), then the
+    paged-attention kernel (Pallas on TPU, XLA gather elsewhere) attends
+    positions [0, pos] with window/softcap masking. Pages are position-
+    aligned so validity needs no kpos array: stale tokens a recycled page
+    carries sit at positions >= the new owner's length and are masked until
+    overwritten.
+    """
+    from repro.kernels.paged_attention import paged_decode
+
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b = x.shape[0]
+    n_pages, _, page_size, _ = cache["k_pages"].shape
+    pos = jnp.asarray(pos, jnp.int32)
+    assert pos.ndim == 1, pos.shape
+
+    q = _split_heads(x @ p["wq"], h, hd)
+    k_new = _split_heads(x @ p["wk"], kvh, hd)
+    v_new = _split_heads(x @ p["wv"], kvh, hd)
+    ppos = pos[:, None, None]
+    q = apply_rope(q, ppos, cfg.rope_theta)
+    k_new = apply_rope(k_new, ppos, cfg.rope_theta)
+
+    rows = jnp.arange(b)
+    pid = page_tbl[rows, pos // page_size]                   # (B,)
+    pid = jnp.where(pid >= 0, pid, n_pages)                  # -1 -> OOB: drop
+    off = pos % page_size
+    k_pages = cache["k_pages"].at[pid, :, off].set(
+        k_new[:, :, 0].astype(cache["k_pages"].dtype), mode="drop")
+    v_pages = cache["v_pages"].at[pid, :, off].set(
+        v_new[:, :, 0].astype(cache["v_pages"].dtype), mode="drop")
+
+    rep = h // kvh
+    qg = q.reshape(b, kvh, rep, hd)
+    out = paged_decode(qg, k_pages, v_pages, page_tbl, pos + 1,
+                       scale=cfg.attn_scale or hd ** -0.5, window=window,
+                       softcap=cfg.attn_logit_softcap)
+    out = out.reshape(b, 1, h * hd).astype(x.dtype)
+    return out @ p["wo"], {"k_pages": k_pages, "v_pages": v_pages}
+
+
 def decode_cross_attention(cfg, p: dict, x: jax.Array, cache: dict):
     """Cross-attn during decode: static encoder KV from prefill cache."""
     out, _ = cross_attention(cfg, p, x, enc_kv=(cache["k"], cache["v"]))

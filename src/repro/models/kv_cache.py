@@ -3,7 +3,7 @@
 "nbl"/"drop" carry NO cache — NBL's KV-cache saving (paper §4.2) is
 structural, and shows up directly in the dry-run memory analysis.
 
-Two cache layouts share the block shapes:
+Three cache layouts share the block shapes:
 
   init_cache       monolithic per-batch cache: every sequence is at the same
                    decode position, so attention slot-validity (`kpos`) is
@@ -17,13 +17,25 @@ Two cache layouts share the block shapes:
                    a recycled slot can never attend to the previous request's
                    KV. `reset_slot` explicitly scrubs a retired slot without
                    reassigning it.
+  paged            (models/paging.py `init_paged_cache`) attention KV lives
+                   in per-layer POOLS of fixed-size, position-aligned pages
+                   — (L, n_pages, KV, page_size, hd) — addressed through a
+                   host-owned per-slot page table; a request occupies only
+                   the pages its tokens cover, and there is no `kpos` at all
+                   (validity derives from position + the table). Non-attn
+                   state keeps the slot layout inside the same tree.
 
-Per-slot bytes (`cache_bytes(cfg, 1, max_len)`) is the unit of the
-scheduler's NBL-aware admission budget: linearizing m of K attention layers
-shrinks it by m/K, which converts directly into more concurrent slots on the
-same HBM (launch/scheduler.py).
+Byte units of the scheduler's NBL-aware admission budgets: per-slot bytes
+(`cache_bytes(cfg, 1, max_len)`, memoized — it sits in the scheduler and
+benchmark hot paths) for the ring engine, and per-PAGE bytes
+(`paging.page_bytes(cfg, page_size)`: one page in one caching layer) for
+the paged engine. Linearizing m of K attention layers shrinks both by m/K,
+which converts directly into more concurrent requests on the same HBM
+(launch/scheduler.py).
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -132,9 +144,15 @@ def reset_slot(slot_cache, slot):
     return jax.tree_util.tree_map_with_path(one, slot_cache)
 
 
+@functools.lru_cache(maxsize=512)
 def cache_bytes(cfg: ModelConfig, batch: int, max_len: int) -> int:
     """Analytic KV/state cache size (paper Table 21 benchmark). With
-    batch=1 this is the per-slot unit of the serving admission budget."""
+    batch=1 this is the per-slot unit of the serving admission budget.
+
+    Memoized on (cfg, batch, max_len) — ModelConfig is a frozen (hashable)
+    dataclass — because each miss runs a full `jax.eval_shape` over the
+    stack and this sits in the scheduler/benchmark hot path (every Engine
+    construction and every admission-budget sweep calls it)."""
     cache = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
     return sum(int(np.prod(x.shape)) * x.dtype.itemsize
                for x in jax.tree.leaves(cache))

@@ -1,0 +1,232 @@
+"""Paged KV-cache subsystem: global page pools + host-side page allocator.
+
+Block-paged KV management (the PagedAttention design) replaces the serving
+engine's one-ring-per-slot reservation with a *pool* of fixed-size pages per
+attention layer. A request owns only the pages that cover the tokens it has
+actually produced, so short requests stop stranding the HBM the scheduler
+budgeted for ``max_len`` — and the freed memory converts into admitted
+traffic. The saving composes multiplicatively with NBL: linearized layers
+carry NO pool at all (paper §4.2), so m of K layers linearized shrinks the
+per-request page bill by m/K on top of the page-granular allocation.
+
+Layout
+------
+Every caching attention layer owns one pool pair, stacked over the group's
+scan dim exactly like the slot cache:
+
+    k_pages / v_pages : (L, n_pages, KV, page_size, hd)
+
+Pages are POSITION-ALIGNED: logical page ``l`` of a request always holds
+absolute positions [l*page_size, (l+1)*page_size). Validity is therefore
+derivable from the request's current length — no per-token ``kpos`` array
+exists in the paged layout. Sliding-window layers keep full-length pages and
+mask in the kernel (they trade the ring's compaction for page sharing).
+
+One page TABLE is shared by all layers (allocation is synchronized: a page
+id is valid in every layer's pool simultaneously). It lives on the HOST as
+an ``(n_slots, pages_per_seq)`` int32 array owned by the engine, entries -1
+= unallocated, and is passed to the decode jit as a regular (tiny) argument
+— appending a page mid-decode is a host-side table write, never a cache-tree
+surgery.
+
+Non-attention state (SSM, conv, cross-attn KV) is not pageable (it is O(1)
+per slot, not O(seq)); those blocks keep the slot-indexed layout from
+``kv_cache.init_slot_cache`` inside the same cache tree.
+
+Unit of account: ``page_bytes(cfg, page_size)`` is the byte size of ONE page
+in ONE layer — the scheduler's page budget (launch/scheduler.nbl_page_budget)
+divides an HBM budget by (caching layers x page_bytes) to size the pool.
+
+Scatter/gather safety: -1 table entries would *wrap* under numpy indexing
+semantics, so every device-side consumer sanitizes ids first —
+``sanitize_page_ids`` maps negatives to ``n_pages`` (out of bounds, dropped
+by scatter mode="drop"); gathers clip to 0 and rely on the position mask.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.kv_cache import _block_cache
+
+DEFAULT_PAGE_SIZE = 64
+
+
+def pages_per_seq(max_len: int, page_size: int) -> int:
+    return -(-max_len // page_size)
+
+
+def n_caching_attn_layers(cfg: ModelConfig) -> int:
+    """Attention invocations that carry a KV pool (shared blocks count once
+    per invocation, like their caches; nbl/drop/mamba/cross contribute 0)."""
+    return sum(1 for b in cfg.blocks() if b.kind == "attn")
+
+
+def page_bytes(cfg: ModelConfig, page_size: int) -> int:
+    """Bytes of ONE page in ONE attention layer (K + V)."""
+    itemsize = jnp.dtype(cfg.compute_dtype).itemsize
+    return 2 * page_size * cfg.n_kv_heads * cfg.head_dim * itemsize
+
+
+def pool_pages_for_budget(cfg: ModelConfig, budget_bytes: int,
+                          page_size: int) -> Optional[int]:
+    """Per-layer pool size (pages) a byte budget buys across all caching
+    layers. None when the stack has no caching attention layer at all."""
+    a = n_caching_attn_layers(cfg)
+    if a == 0:
+        return None
+    return int(budget_bytes // (a * page_bytes(cfg, page_size)))
+
+
+def sanitize_page_ids(ids: jax.Array, n_pages: int) -> jax.Array:
+    """Map unallocated (-1) entries to an out-of-bounds id so scatters with
+    mode="drop" skip them instead of wrapping to the last page."""
+    return jnp.where(ids >= 0, ids, n_pages).astype(jnp.int32)
+
+
+# --------------------------------------------------------------- pools ------
+
+def init_paged_cache(cfg: ModelConfig, n_slots: int, max_len: int, *,
+                     page_size: int = DEFAULT_PAGE_SIZE,
+                     n_pages: Optional[int] = None):
+    """Cache tree for the paged serving engine. Attention blocks get page
+    pools; SSM/conv/cross-attn blocks keep slot-indexed state rows. The tree
+    mirrors the stack plan ({"groups": [{"blocks": [...]}]}), so the stack
+    executor scans it unchanged."""
+    if n_pages is None:
+        n_pages = n_slots * pages_per_seq(max_len, page_size)
+    dtype = jnp.dtype(cfg.compute_dtype)
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    groups = []
+    for g in cfg.stack:
+        blocks = []
+        for blk in g.unit:
+            stack = g.repeat
+            if blk.kind == "attn":
+                shp = (stack, n_pages, kv, page_size, hd)
+                blocks.append({"k_pages": jnp.zeros(shp, dtype),
+                               "v_pages": jnp.zeros(shp, dtype)})
+            else:
+                blocks.append(_block_cache(cfg, blk, n_slots, max_len, stack,
+                                           dtype, per_slot_pos=True))
+        groups.append({"blocks": blocks})
+    return {"groups": groups}
+
+
+def assign_pages(cfg: ModelConfig, paged_cache, prefill_cache, slot,
+                 page_ids, *, page_size: int):
+    """Write a batch=1 POSITION-ALIGNED prefill cache into the page pools.
+
+    ``prefill_cache`` must come from ``prefill(..., paged=True)`` with
+    ``cache_len`` a multiple of ``page_size`` (no ring wrap). ``page_ids``
+    holds >= cache_len // page_size int32 entries (a full page-table row is
+    fine); entry i is the physical page for logical page i, -1 for prompt
+    pages that were never allocated (bucket padding) — those tiles are
+    dropped. Non-attention
+    block state is written into slot row ``slot`` wholesale, so a recycled
+    slot's SSM/conv/cross state can never leak across tenancies.
+    """
+    page_ids = jnp.asarray(page_ids, jnp.int32)
+
+    def row_assign(dst, src):
+        if src.ndim == dst.ndim - 1:            # kpos (L, W) -> (L, 1, W)
+            src = src[:, None]
+        idx = (0, slot) + (0,) * (dst.ndim - 2)
+        return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), idx)
+
+    def page_assign(dst, src):                  # src: (L, 1, KV, S, hd)
+        l, _, kv, s, hd = src.shape
+        npg = s // page_size
+        assert npg * page_size == s and npg <= page_ids.shape[0], \
+            (s, page_size, page_ids.shape)
+        ids = page_ids[:npg]
+        tiles = src[:, 0].reshape(l, kv, npg, page_size, hd)
+        tiles = tiles.transpose(0, 2, 1, 3, 4).astype(dst.dtype)
+        ids = sanitize_page_ids(ids, dst.shape[1])
+        return dst.at[:, ids].set(tiles, mode="drop")
+
+    new_groups = []
+    for gi, g in enumerate(cfg.stack):
+        blocks = []
+        for u, blk in enumerate(g.unit):
+            dst = paged_cache["groups"][gi]["blocks"][u]
+            src = prefill_cache["groups"][gi]["blocks"][u]
+            if dst is None:
+                blocks.append(None)
+            elif blk.kind == "attn":
+                blocks.append({"k_pages": page_assign(dst["k_pages"], src["k"]),
+                               "v_pages": page_assign(dst["v_pages"], src["v"])})
+            else:
+                blocks.append(jax.tree.map(row_assign, dst, src))
+        new_groups.append({"blocks": blocks})
+    return {"groups": new_groups}
+
+
+# ----------------------------------------------------------- allocator ------
+
+class DoubleFreeError(RuntimeError):
+    pass
+
+
+@dataclass
+class PageAllocator:
+    """Host-side free-list allocator over physical page ids [0, n_pages).
+
+    alloc is all-or-nothing (returns None when the pool cannot satisfy the
+    request — the caller preempts or defers); free rejects double-frees and
+    foreign ids. Slot retirement is copy-free: pages go back on the free
+    list untouched, and isolation is guaranteed by position masking (a
+    reallocated page's stale tokens sit at positions the new owner has not
+    reached, hence masked; they are overwritten before ever becoming valid).
+    """
+    n_pages: int
+    _free: list = field(default_factory=list)
+    _used: set = field(default_factory=set)
+    peak_in_use: int = 0
+
+    def __post_init__(self):
+        self._free = list(range(self.n_pages - 1, -1, -1))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._used)
+
+    def alloc(self, n: int) -> Optional[list[int]]:
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        self._used.update(ids)
+        self.peak_in_use = max(self.peak_in_use, len(self._used))
+        return ids
+
+    def free(self, ids) -> None:
+        for pid in ids:
+            if pid not in self._used:
+                raise DoubleFreeError(f"page {pid} is not allocated")
+            self._used.discard(pid)
+            self._free.append(pid)
+
+    def check_invariants(self) -> None:
+        """Free-list conservation: used and free partition [0, n_pages)."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate ids on free list"
+        assert not (free & self._used), "page both free and used"
+        assert free | self._used == set(range(self.n_pages)), "page lost"
+
+
+# --------------------------------------------------------------- stats ------
+
+def build_page_table(n_slots: int, max_len: int,
+                     page_size: int) -> np.ndarray:
+    return np.full((n_slots, pages_per_seq(max_len, page_size)), -1, np.int32)

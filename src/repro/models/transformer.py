@@ -28,7 +28,7 @@ from repro.configs.base import Block, ModelConfig
 from repro.distributed import constrain
 from repro.models.attention import (
     cross_attention, decode_attention, decode_cross_attention, init_attn,
-    self_attention,
+    decode_paged_attention, self_attention,
 )
 from repro.models.layers import embed_tokens, init_mlp, mlp, rmsnorm, softcap
 from repro.models.moe import init_moe, moe_ffn
@@ -140,8 +140,15 @@ def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
 # --------------------------------------------------------------------------
 
 def _block_fwd(cfg: ModelConfig, blk: Block, p, x, *, mode: str,
-               positions, enc, cache, pos, cache_len: int):
-    """Returns (x, new_cache, aux). ``cache`` is this block's slice."""
+               positions, enc, cache, pos, cache_len: int,
+               page_tbl=None, paged: bool = False, valid_len=None):
+    """Returns (x, new_cache, aux). ``cache`` is this block's slice.
+
+    ``page_tbl``/``paged``/``valid_len`` serve the paged engine: a decode
+    cache holding page pools (key "k_pages") dispatches to the paged kernel;
+    a paged prefill keeps full-width position-aligned caches (no ring wrap);
+    ``valid_len`` masks bucket-padding tokens out of the prefill cache.
+    """
     aux = jnp.zeros((), jnp.float32)
     new_cache = None
 
@@ -149,13 +156,19 @@ def _block_fwd(cfg: ModelConfig, blk: Block, p, x, *, mode: str,
     if blk.kind == "attn":
         h = rmsnorm(x, p["norm1"], cfg.norm_eps)
         if mode == "decode":
-            h, new_cache = decode_attention(cfg, p["mixer"], h, cache, pos,
-                                            window=blk.window)
+            if cache is not None and "k_pages" in cache:
+                h, new_cache = decode_paged_attention(
+                    cfg, p["mixer"], h, cache, pos, page_tbl,
+                    window=blk.window)
+            else:
+                h, new_cache = decode_attention(cfg, p["mixer"], h, cache,
+                                                pos, window=blk.window)
         else:
             h, (k, v) = self_attention(cfg, p["mixer"], h, window=blk.window,
                                        positions=positions)
             if mode == "prefill":
-                new_cache = _ring_cache(cfg, blk, k, v, cache_len)
+                new_cache = _ring_cache(cfg, blk, k, v, cache_len,
+                                        paged=paged, valid_len=valid_len)
         x = x + h.astype(x.dtype)
     elif blk.kind == "cross_attn":
         h = rmsnorm(x, p["norm1"], cfg.norm_eps)
@@ -196,11 +209,23 @@ def _block_fwd(cfg: ModelConfig, blk: Block, p, x, *, mode: str,
     return x, new_cache, aux
 
 
-def _ring_cache(cfg: ModelConfig, blk: Block, k, v, cache_len: int) -> dict:
+def _ring_cache(cfg: ModelConfig, blk: Block, k, v, cache_len: int, *,
+                paged: bool = False, valid_len=None) -> dict:
     """Convert full-sequence (roped) K/V (B,KV,S,hd) into the ring-buffer
-    cache layout used by decode (width = min(window, cache_len))."""
+    cache layout used by decode (width = min(window, cache_len)).
+
+    ``paged`` keeps the cache POSITION-ALIGNED at full ``cache_len`` width
+    even for windowed layers (pages must map positions linearly; the window
+    is enforced by the decode mask instead of ring compaction). ``valid_len``
+    (traced scalar) masks positions >= it to kpos=-1 — bucket-padded prompt
+    tokens are written but never attendable.
+    """
     s = k.shape[2]
-    w = min(blk.window, cache_len) if blk.window is not None else cache_len
+    if paged:
+        w = cache_len
+        assert w >= s, (w, s)
+    else:
+        w = min(blk.window, cache_len) if blk.window is not None else cache_len
     if w >= s:
         pad = w - s
         kr = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
@@ -210,10 +235,12 @@ def _ring_cache(cfg: ModelConfig, blk: Block, k, v, cache_len: int) -> dict:
     else:
         start = s - w
         slots = jnp.arange(w)
-        src = start + ((slots - start) % w)
+        src = (start + ((slots - start) % w)).astype(jnp.int32)
         kr = jnp.take(k, src, axis=2)
         vr = jnp.take(v, src, axis=2)
-        kpos = src.astype(jnp.int32)
+        kpos = src
+    if valid_len is not None:
+        kpos = jnp.where((kpos >= 0) & (kpos < valid_len), kpos, -1)
     dt = jnp.dtype(cfg.compute_dtype)
     return {"k": kr.astype(dt), "v": vr.astype(dt), "kpos": kpos}
 
@@ -224,7 +251,8 @@ def _ring_cache(cfg: ModelConfig, blk: Block, k, v, cache_len: int) -> dict:
 
 def _stack_fwd(cfg: ModelConfig, params: dict, x, *, mode: str,
                positions=None, enc=None, cache=None, pos=None,
-               cache_len: int = 0, remat: bool = False):
+               cache_len: int = 0, remat: bool = False,
+               page_tbl=None, paged: bool = False, valid_len=None):
     """Run the full stack. Returns (x, new_cache_or_None, aux_sum)."""
     aux_total = jnp.zeros((), jnp.float32)
     new_groups = []
@@ -241,7 +269,8 @@ def _stack_fwd(cfg: ModelConfig, params: dict, x, *, mode: str,
                 c_u = cs[u] if cs is not None else None
                 xc, nc, aux_u = _block_fwd(
                     cfg, blk, p_u, xc, mode=mode, positions=positions,
-                    enc=enc, cache=c_u, pos=pos, cache_len=cache_len)
+                    enc=enc, cache=c_u, pos=pos, cache_len=cache_len,
+                    page_tbl=page_tbl, paged=paged, valid_len=valid_len)
                 auxc = auxc + aux_u
                 outs.append(nc)
             return (xc, auxc), outs
@@ -309,29 +338,48 @@ def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *,
 
 
 def prefill(cfg: ModelConfig, params: dict, tokens, *, enc=None,
-            cache_len: Optional[int] = None):
+            cache_len: Optional[int] = None, paged: bool = False,
+            valid_len=None):
     """Process the prompt, build KV/state caches, return last-token logits.
     Logits are computed at the final position only (vocab-size safe at 32k+
-    contexts). Returns (logits (B,1,V), cache)."""
+    contexts). Returns (logits (B,1,V), cache).
+
+    ``paged`` builds POSITION-ALIGNED full-width caches (no ring wrap) for
+    page-tiled assignment (models/paging.assign_pages). ``valid_len`` (a
+    traced int32 scalar) supports prompt-length bucketing: ``tokens`` may be
+    right-padded to a bucket length — logits come from position
+    ``valid_len - 1`` and cache entries at positions >= valid_len are
+    masked unattendable, so one jit serves every prompt length in the
+    bucket. Not valid for SSM stacks (padding corrupts the scanned state).
+    """
     cache_len = cache_len or tokens.shape[1]
     dt = jnp.dtype(cfg.compute_dtype)
     x = embed_tokens(params["embed"], tokens, dt)
     positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
     x, cache, _ = _stack_fwd(cfg, params, x, mode="prefill",
                              positions=positions, enc=enc,
-                             cache_len=cache_len)
-    return _logits(cfg, params, x[:, -1:]), cache
+                             cache_len=cache_len, paged=paged,
+                             valid_len=valid_len)
+    if valid_len is None:
+        x_last = x[:, -1:]
+    else:
+        last = jnp.asarray(valid_len, jnp.int32) - 1
+        x_last = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)
+    return _logits(cfg, params, x_last), cache
 
 
-def decode_step(cfg: ModelConfig, params: dict, token, cache, pos):
+def decode_step(cfg: ModelConfig, params: dict, token, cache, pos,
+                page_tbl=None):
     """One autoregressive step. token: (B,1) int32; pos: absolute position
     of this token — () int32 with a monolithic cache (all sequences at one
     position), or (B,) int32 with a slot cache (per-slot positions, the
-    continuous-batching engine). Returns (logits (B,1,V), new_cache)."""
+    continuous-batching engine). With a PAGED cache (models/paging.py),
+    ``page_tbl`` (B, n_lpages) int32 maps each slot's logical pages to
+    physical pool pages. Returns (logits (B,1,V), new_cache)."""
     dt = jnp.dtype(cfg.compute_dtype)
     x = embed_tokens(params["embed"], token, dt)
     x, new_cache, _ = _stack_fwd(cfg, params, x, mode="decode", cache=cache,
-                                 pos=pos)
+                                 pos=pos, page_tbl=page_tbl)
     return _logits(cfg, params, x), new_cache
 
 

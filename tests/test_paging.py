@@ -1,0 +1,396 @@
+"""Paged KV-cache subsystem: kernel parity, engine parity vs the ring
+decode path, recycled-page isolation, allocator invariants, page budget,
+preemption, and prompt-length bucketing."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.configs import get_config
+from repro.core.surgery import compress_config, nbl_variant
+from repro.launch.engine import Engine
+from repro.launch.scheduler import latency_stats, nbl_page_budget, Request
+from repro.launch.serve import generate
+from repro.models import init_params
+from repro.models.paging import (
+    DoubleFreeError, PageAllocator, n_caching_attn_layers, page_bytes,
+    pages_per_seq,
+)
+
+
+def _setup(arch="tiny-dense", seed=0):
+    cfg = get_config(arch)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    return cfg, params
+
+
+def _ref(cfg, params, prompt, max_new):
+    out = generate(cfg, params, jnp.asarray(prompt)[None], max_new=max_new)
+    return np.asarray(out)[0]
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            for n in lens]
+
+
+# ----------------------------------------------------- kernel parity -------
+
+@pytest.mark.parametrize("rep,window,softcap", [
+    (1, None, None),       # MHA
+    (2, None, None),       # GQA
+    (2, 6, None),          # GQA + sliding window
+    (2, None, 30.0),       # GQA + logit softcap
+    (2, 6, 30.0),
+])
+def test_paged_kernel_matches_xla_ref(rep, window, softcap):
+    """Interpret-mode Pallas kernel == XLA gather reference across
+    GQA/window/softcap, with ragged lengths and an inactive slot."""
+    from repro.kernels.paged_attention import paged_attention, paged_decode_xla
+
+    rng = np.random.default_rng(0)
+    b, kv, hd, ps, npg, pool = 4, 2, 16, 8, 4, 12
+    q = jnp.asarray(rng.standard_normal((b, kv, rep, hd)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((pool, kv, ps, hd)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((pool, kv, ps, hd)), jnp.float32)
+    tbl = np.full((b, npg), -1, np.int32)
+    tbl[0, :3] = [4, 7, 1]          # 18 tokens
+    tbl[1, :1] = [2]                # 5 tokens
+    tbl[2, :4] = [0, 3, 5, 6]       # page-exact 32 tokens
+    lens = jnp.asarray([18, 5, 32, 0], jnp.int32)   # slot 3 inactive
+
+    out = paged_attention(q, kp, vp, jnp.asarray(tbl), lens,
+                          window=window, softcap=softcap, interpret=True)
+    ref = paged_decode_xla(q, kp, vp, jnp.asarray(tbl), lens,
+                           window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# ------------------------------------------------ engine decode parity -----
+
+@pytest.mark.parametrize("arch", ["tiny-dense", "tiny-swa", "tiny-gemma",
+                                  "tiny-zamba"])
+def test_paged_engine_parity_matches_generate(arch):
+    """Greedy tokens from the paged engine match the single-request
+    generate() loop across dense / sliding-window / softcap / hybrid-SSM
+    stacks (the paged analogue of the ring parity test)."""
+    cfg, params = _setup(arch)
+    prompts = _prompts(cfg, [6, 10, 8])
+    refs = [_ref(cfg, params, p, 5) for p in prompts]
+
+    eng = Engine(cfg, params, max_len=24, n_slots=2, paged=True, page_size=8)
+    rids = [eng.submit(p, 5) for p in prompts]
+    out = eng.run()
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(out[rid], refs[i], err_msg=f"req {i}")
+
+
+def test_paged_engine_parity_nbl_compressed():
+    """Paged serving of an NBL-compressed stack: linearized layers carry no
+    page pool, and decode parity with generate() is exact."""
+    cfg, _ = _setup()
+    ncfg = compress_config(cfg, cfg.attn_layer_indices()[-2:], "nbl")
+    params = init_params(jax.random.PRNGKey(1), ncfg)
+    prompts = _prompts(ncfg, [7, 9])
+    refs = [_ref(ncfg, params, p, 4) for p in prompts]
+
+    eng = Engine(ncfg, params, max_len=16, n_slots=2, paged=True, page_size=8)
+    rids = [eng.submit(p, 4) for p in prompts]
+    out = eng.run()
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(out[rid], refs[i])
+
+
+def test_paged_ring_same_tokens_under_load():
+    """The two engines emit identical per-request tokens for an identical
+    ragged stream (bit-comparable decode paths at the token level)."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg, [4, 12, 6, 9, 5], seed=3)
+    outs = {}
+    for paged in (False, True):
+        eng = Engine(cfg, params, max_len=20, n_slots=2, paged=paged,
+                     page_size=8)
+        rids = [eng.submit(p, 4) for p in prompts]
+        got = eng.run()
+        outs[paged] = [got[r] for r in rids]
+    for a, b in zip(outs[False], outs[True]):
+        np.testing.assert_array_equal(a, b)
+
+
+# -------------------------------------------- recycled-page isolation ------
+
+def test_recycled_pages_no_stale_kv():
+    """Sequential tenancy through ONE slot: the second request reuses the
+    first tenant's freed pages (same physical ids), and its tokens must be
+    identical to a fresh engine's — any stale KV surviving the position
+    mask would corrupt them."""
+    cfg, params = _setup()
+    long_p, short_p = _prompts(cfg, [14, 4], seed=11)
+
+    eng = Engine(cfg, params, max_len=20, n_slots=1, paged=True, page_size=4)
+    rid_a = eng.submit(long_p, 6)
+    rid_b = eng.submit(short_p, 6)
+    out = eng.run()
+    assert len(out[rid_a]) == 6
+    assert eng.allocator.in_use == 0            # all pages back on free list
+
+    fresh = Engine(cfg, params, max_len=20, n_slots=1, paged=True,
+                   page_size=4)
+    rid_f = fresh.submit(short_p, 6)
+    np.testing.assert_array_equal(out[rid_b], fresh.run()[rid_f])
+    np.testing.assert_array_equal(out[rid_b], _ref(cfg, params, short_p, 6))
+
+
+def test_freed_pages_not_attendable_by_new_owner():
+    """Direct paged-cache check (the paged analogue of reset_slot's
+    guarantee): after a request's pages are freed and handed to a new
+    request, decode logits depend only on the new owner's tokens — asserted
+    by comparing against a pool that never had a previous tenant."""
+    from repro.models import decode_step, prefill
+    from repro.models.paging import (assign_pages, build_page_table,
+                                     init_paged_cache)
+
+    cfg, params = _setup()
+    ps, max_len = 4, 16
+    old_p, new_p = _prompts(cfg, [12, 5], seed=21)
+
+    def run_once(cache, tbl, prompt, page_ids):
+        logits, pc = prefill(cfg, params, jnp.asarray(prompt)[None],
+                             cache_len=pages_per_seq(len(prompt), ps) * ps,
+                             paged=True)
+        tbl = tbl.copy()
+        npg = pages_per_seq(len(prompt), ps)
+        tbl[0, :npg] = page_ids[:npg]
+        cache = assign_pages(cfg, cache, pc, jnp.int32(0),
+                             jnp.asarray(tbl[0]), page_size=ps)
+        tok = jnp.argmax(logits[0, -1])[None, None].astype(jnp.int32)
+        out, _ = decode_step(cfg, params, tok, cache,
+                             jnp.asarray([len(prompt)], jnp.int32),
+                             page_tbl=jnp.asarray(tbl))
+        return np.asarray(out)
+
+    tbl0 = build_page_table(1, max_len, ps)
+    # tenancy 1: old_p occupies pages [0,1,2]; then "freed" (table cleared)
+    dirty = init_paged_cache(cfg, 1, max_len, page_size=ps, n_pages=4)
+    logits, pc = prefill(cfg, params, jnp.asarray(old_p)[None],
+                         cache_len=12, paged=True)
+    dirty = assign_pages(cfg, dirty, pc, jnp.int32(0),
+                         jnp.asarray([0, 1, 2], jnp.int32), page_size=ps)
+    # tenancy 2 on the DIRTY pool reuses pages [0,1] for the new prompt
+    got = run_once(dirty, tbl0, new_p, [0, 1])
+    clean = init_paged_cache(cfg, 1, max_len, page_size=ps, n_pages=4)
+    want = run_once(clean, tbl0, new_p, [0, 1])
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+# ----------------------------------------------------- allocator -----------
+
+def test_allocator_basic():
+    a = PageAllocator(4)
+    ids = a.alloc(3)
+    assert sorted(ids) == sorted(set(ids)) and len(ids) == 3
+    assert a.alloc(2) is None                  # all-or-nothing
+    assert a.free_pages == 1
+    a.free(ids[:1])
+    assert a.free_pages == 2
+    with pytest.raises(DoubleFreeError):
+        a.free(ids[:1])
+    with pytest.raises(DoubleFreeError):
+        a.free([99])                           # foreign id
+    a.check_invariants()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(0, 5)), max_size=40))
+def test_allocator_invariants_property(ops):
+    """Hypothesis property: under any alloc/free interleaving, no page is
+    ever double-allocated and the free list + allocations always partition
+    the pool (free-list conservation)."""
+    a = PageAllocator(8)
+    held: list[list[int]] = []
+    for is_alloc, n in ops:
+        if is_alloc:
+            got = a.alloc(n)
+            if got is not None:
+                flat = [p for grp in held for p in grp]
+                assert not (set(got) & set(flat)), "double allocation"
+                held.append(got)
+        elif held:
+            a.free(held.pop(n % len(held)))
+        a.check_invariants()
+    assert a.in_use == sum(len(g) for g in held)
+
+
+# ------------------------------------------------- page budget / NBL -------
+
+def test_nbl_page_budget_monotone_in_m():
+    """Fixed byte budget: linearizing more layers -> more admitted requests
+    (linearized layers contribute zero pages)."""
+    cfg, _ = _setup()
+    budget = 6 * n_caching_attn_layers(cfg) * page_bytes(cfg, 8)  # 6 pages
+    got = [nbl_page_budget(nbl_variant(cfg, m), budget, page_size=8,
+                           expected_len=16) for m in range(4)]
+    assert got[0] == 3                          # 6 pages / 2 per request
+    assert got == sorted(got)
+    assert got[-1] > got[0]
+
+
+def test_paged_budget_beats_ring_on_short_prompts():
+    """Equal HBM budget, short expected length: page-granular admission
+    buys strictly more concurrency than max_len rings."""
+    from repro.models.kv_cache import cache_bytes
+    cfg, params = _setup()
+    max_len = 64
+    budget = 2 * cache_bytes(cfg, 1, max_len)
+    ring = Engine(cfg, params, max_len=max_len, cache_budget_bytes=budget)
+    paged = Engine(cfg, params, max_len=max_len, cache_budget_bytes=budget,
+                   paged=True, page_size=8, expected_len=16)
+    assert paged.n_slots > ring.n_slots
+    assert ring.n_slots == 2
+
+
+# ------------------------------------------------------- preemption --------
+
+def test_pool_exhaustion_preempts_youngest_and_completes():
+    """A pool too small for both in-flight requests to reach max_new: the
+    younger request is preempted mid-decode (pages freed, requeued), the
+    older finishes, and every request still completes with exactly the
+    single-request reference tokens."""
+    cfg, params = _setup()
+    p1, p2 = _prompts(cfg, [8, 8], seed=5)
+    refs = [_ref(cfg, params, p, 10) for p in (p1, p2)]
+
+    # 2 slots x (8 prompt + 10 new = 18 tokens -> 5 pages of 4) but only
+    # 7 pages: both admit (prompt needs 2 pages each + headroom), then the
+    # pool runs dry as decode crosses page boundaries.
+    eng = Engine(cfg, params, max_len=20, n_slots=2, paged=True, page_size=4)
+    eng.allocator = PageAllocator(7)
+    eng.n_pages = 7
+    rids = [eng.submit(p1, 10), eng.submit(p2, 10)]
+    out = eng.run(max_steps=200)
+    assert eng.n_preemptions >= 1
+    for rid, want in zip(rids, refs):
+        np.testing.assert_array_equal(out[rid], want)
+    eng.allocator.check_invariants()
+    assert eng.allocator.in_use == 0
+
+
+def test_sliding_window_releases_dead_pages_with_parity():
+    """Pure-SWA stack: pages wholly below the attention window are freed
+    mid-generation (the paged analogue of ring compaction), the pool's peak
+    occupancy stays near O(window) instead of O(sequence), and the emitted
+    tokens still exactly match generate()."""
+    from repro.configs.base import dense_stack
+    cfg = get_config("tiny-swa").replace(stack=dense_stack(4, window=8))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompt = _prompts(cfg, [6], seed=2)[0]
+    want = _ref(cfg, params, prompt, 20)       # runs to position 25
+
+    eng = Engine(cfg, params, max_len=32, n_slots=1, paged=True, page_size=4)
+    assert eng._page_window == 8
+    rid = eng.submit(prompt, 20)
+    out = eng.run()
+    np.testing.assert_array_equal(out[rid], want)
+    # 26 positions = 7 pages if nothing were freed; a W=8 window needs at
+    # most 3 live 4-token pages (+1 write fault in flight)
+    assert eng.allocator.peak_in_use <= 4
+    assert eng.allocator.in_use == 0
+    eng.allocator.check_invariants()
+
+    # one global-attention layer pins everything: no release horizon
+    dcfg, dparams = _setup()
+    dense_eng = Engine(dcfg, dparams, max_len=16, n_slots=1, paged=True,
+                       page_size=4)
+    assert dense_eng._page_window is None
+
+
+# ------------------------------------------------------- bucketing ---------
+
+def test_prefill_bucketing_bounds_jits_with_exact_parity():
+    """Distinct prompt lengths within one power-of-two bucket share a
+    single prefill jit, and emitted tokens still exactly match the
+    per-length reference loop."""
+    cfg, params = _setup()
+    lens = [5, 6, 7, 8, 3]                     # buckets: 8, 8, 8, 8, 4
+    prompts = _prompts(cfg, lens, seed=9)
+    refs = [_ref(cfg, params, p, 4) for p in prompts]
+
+    eng = Engine(cfg, params, max_len=16, n_slots=2)
+    assert eng.bucket_prompts
+    rids = [eng.submit(p, 4) for p in prompts]
+    out = eng.run()
+    assert len(eng._prefill_jits) == 2         # {8, 4}, not 5
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(out[rid], refs[i], err_msg=f"req {i}")
+
+
+def test_bucketing_gates_off_for_ssm_and_ring_windows():
+    """Exactness gates: SSM stacks never bucket (padding corrupts scanned
+    state); windowed attention buckets only under the position-aligned
+    paged layout."""
+    for arch, paged, want in [("tiny-mamba", False, False),
+                              ("tiny-zamba", True, False),
+                              ("tiny-swa", False, False),
+                              ("tiny-swa", True, True),
+                              ("tiny-dense", False, True)]:
+        cfg, params = _setup(arch)
+        eng = Engine(cfg, params, max_len=16, n_slots=1, paged=paged,
+                     page_size=8)
+        assert eng.bucket_prompts is want, (arch, paged)
+
+
+# ------------------------------------------------------- stats -------------
+
+def test_latency_stats_tail_fields():
+    reqs = []
+    for i in range(10):
+        r = Request(rid=i, prompt=np.array([1]), max_new=4,
+                    t_submit=0.0, t_admit=0.1, t_first=0.2 + i * 0.01,
+                    t_finish=1.0 + i * 0.1)
+        r.tokens = [1, 2, 3, 4]
+        reqs.append(r)
+    s = latency_stats(reqs)
+    assert {"p99_ttft_s", "p50_ttft_s", "decode_tok_s_p50",
+            "decode_tok_s_min"} <= set(s)
+    assert s["p99_ttft_s"] >= s["p50_ttft_s"]
+    assert s["decode_tok_s_min"] <= s["decode_tok_s_p50"]
+
+
+def test_cache_bytes_memoized(monkeypatch):
+    """cache_bytes hits its memo on repeat (cfg, batch, max_len) calls —
+    it sits in the scheduler/benchmark hot path."""
+    from repro.models import kv_cache
+    cfg, _ = _setup()
+    kv_cache.cache_bytes.cache_clear()
+    calls = {"n": 0}
+    real = jax.eval_shape
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        return real(*a, **k)
+
+    monkeypatch.setattr(kv_cache.jax, "eval_shape", counting)
+    a = kv_cache.cache_bytes(cfg, 1, 64)
+    b = kv_cache.cache_bytes(cfg, 1, 64)
+    assert a == b and calls["n"] == 1
+    kv_cache.cache_bytes(cfg, 1, 128)
+    assert calls["n"] == 2
+
+
+def test_paged_stats_fields():
+    cfg, params = _setup()
+    eng = Engine(cfg, params, max_len=16, n_slots=2, paged=True, page_size=8)
+    for p in _prompts(cfg, [5, 7], seed=1):
+        eng.submit(p, 3)
+    eng.run()
+    s = eng.stats()
+    assert s["n"] == 2 and s["n_pages"] == eng.n_pages
+    assert 0.0 < s["pool_utilization"] <= 1.0
+    assert s["pages_in_use"] == 0 and s["n_preemptions"] == 0
