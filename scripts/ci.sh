@@ -4,6 +4,10 @@
 #   2. fast continuous-batching engine smoke on the tiny config
 #   3. paged-engine smoke: interpret-mode paged-attention kernel vs its XLA
 #      reference + paged-engine/generate() token parity on the tiny config
+#   4. prefix-sharing smoke: two requests sharing a 2-page prefix — the
+#      second admission prefills the suffix only (refcounted CoW pages)
+#      and still exact-matches generate(); then the prefix_throughput
+#      benchmark scenario under --fast
 #
 #   bash scripts/ci.sh
 set -euo pipefail
@@ -80,4 +84,41 @@ print(f"paged smoke OK: kernel==xla; {s['n']} requests, "
       f"{s['n_decode_steps']} decode sweeps, {s['n_pages']} pages, "
       f"peak {s['peak_pages_in_use']} in use")
 EOF
+
+echo "== prefix-sharing smoke (tiny config) =="
+python - <<'EOF'
+import warnings; warnings.filterwarnings("ignore")
+import jax, numpy as np, jax.numpy as jnp
+from repro.configs import get_config
+from repro.launch.engine import Engine
+from repro.launch.serve import generate
+from repro.models import init_params
+
+cfg = get_config("tiny-dense")
+params = init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+sys_p = rng.integers(0, cfg.vocab_size, 17).astype(np.int32)  # >= 2 full pages
+prompts = [np.concatenate([sys_p, rng.integers(0, cfg.vocab_size, n)
+                           .astype(np.int32)]) for n in (4, 6)]
+refs = [np.asarray(generate(cfg, params, jnp.asarray(p)[None],
+                            max_new=5))[0] for p in prompts]
+eng = Engine(cfg, params, max_len=48, n_slots=2, paged=True, page_size=8,
+             prefix_sharing=True)
+rids = [eng.submit(p, 5) for p in prompts]
+out = eng.run()
+for i, rid in enumerate(rids):
+    np.testing.assert_array_equal(out[rid], refs[i])
+s = eng.stats()
+assert s["n_prefix_hits"] == 1, s          # 2nd admission hit the index
+# 2nd prefill covered ONLY the suffix past the 2 shared pages (16 tokens)
+assert s["n_prefill_tokens"] == len(prompts[0]) + len(prompts[1]) - 16, s
+eng.allocator.check_invariants()
+print(f"prefix smoke OK: {s['n']} requests, {s['n_prefix_hits']} hit, "
+      f"{s['n_prefill_tokens']} tokens prefilled, "
+      f"{s['n_shared_prompt_tokens']} shared")
+EOF
+
+echo "== prefix_throughput scenario (--fast) =="
+python -m benchmarks.run --fast --only prefix_throughput > /dev/null
+test -s benchmarks/out/prefix_throughput.json
 echo "CI OK"

@@ -241,15 +241,30 @@ SHAPES: dict[str, ShapeConfig] = {
     # paged engine decode: page-pool cache + per-slot page table
     "serve_paged_32k": ShapeConfig("serve_paged_32k", "serve_paged",
                                    32_768, 128),
+    # prefix-sharing partial prefill: 32 suffixes behind one shared
+    # 32k-token prompt prefix resident in the paged pools
+    "prefill_shared_32k": ShapeConfig("prefill_shared_32k",
+                                      "prefill_shared", 32_768, 32),
     "long_500k":   ShapeConfig("long_500k",   "decode",  524_288, 1),
 }
 
 
 def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
-    """(applicable, reason-if-not). long_500k needs sub-quadratic attention."""
+    """(applicable, reason-if-not). long_500k needs sub-quadratic attention;
+    prefill_shared needs a resumable (non-SSM) stack with paged KV."""
     if shape.name == "long_500k" and not cfg.sub_quadratic:
         return False, ("full-attention arch: 524k dense KV cache/attention is "
                        "the quadratic regime this shape excludes (DESIGN.md)")
+    if shape.kind == "prefill_shared":
+        if any(b.kind == "mamba" for b in cfg.blocks()):
+            return False, ("SSM stack: partial prefill cannot resume scanned "
+                           "state mid-sequence (models/transformer.prefill)")
+        if any(b.kind == "cross_attn" for b in cfg.blocks()):
+            return False, ("cross-attention stack: prefix KV is conditioned "
+                           "on per-request enc embeddings, not shareable by "
+                           "prompt tokens (launch/engine.py)")
+        if not any(b.kind == "attn" for b in cfg.blocks()):
+            return False, "no caching attention layer: nothing to share"
     return True, ""
 
 

@@ -81,6 +81,20 @@ def build_target(cfg, shape):
         ntok = shape.global_batch * shape.seq_len
         return prefill_step, args, shardings, ntok, False
 
+    if shape.kind == "prefill_shared":
+        # prefix-sharing partial prefill: suffix tokens at absolute
+        # positions past a pooled shared prefix (launch/engine.py _admit)
+        def shared_prefill_step(params, tokens, cache, ptbl, plen):
+            return prefill(cfg, params, tokens, cache_len=shape.seq_len,
+                           paged=True, prefix_cache=cache, prefix_tbl=ptbl,
+                           prefix_len=plen)
+        args = (pshapes, ins["tokens"], ins["cache"], ins["prefix_tbl"],
+                ins["prefix_len"])
+        shardings = (pspecs, shaped_spec(ins["tokens"].shape, "dp", None),
+                     cache_specs(ins["cache"]), P(), P())
+        ntok = shape.global_batch * shape.seq_len
+        return shared_prefill_step, args, shardings, ntok, False
+
     # decode/serve: one new token per sequence against a seq_len KV cache.
     # "serve" is the engine's batched slot-decode: pos is a per-slot (B,)
     # vector sharded with the slot dim; "decode" keeps the scalar pos;

@@ -13,16 +13,31 @@ Architecture (scheduler → engine → cache):
       ring (default)   models/kv_cache.init_slot_cache — a full max_len
                        ring reserved per slot. Budget unit: bytes/slot.
       paged            models/paging.init_paged_cache — per-layer page
-                       pools + a host-side PageAllocator and page table.
-                       A request owns only the pages its tokens cover;
-                       pages are allocated ON DEMAND as decode crosses a
-                       page boundary, and when the pool runs dry the
-                       YOUNGEST in-flight request is preempted (pages
-                       freed, request requeued — it restarts from its
-                       prompt) so the oldest requests always finish.
-                       Budget unit: pages (scheduler.nbl_page_budget) —
-                       short requests stop stranding max_len-sized rings,
-                       which converts directly into admitted traffic.
+                       pools + a host-side refcounted PageAllocator and
+                       page table. A request REFERENCES only the pages its
+                       tokens cover; pages are allocated ON DEMAND as
+                       decode crosses a page boundary, and when the pool
+                       runs dry, unreferenced prefix-index entries are
+                       evicted (LRU) first and only then is the YOUNGEST
+                       in-flight request preempted (pages unref'd, request
+                       requeued — it restarts from its prompt) so the
+                       oldest requests always finish. Budget unit: pages
+                       referenced, shared pages billed once
+                       (scheduler.nbl_page_budget) — short requests stop
+                       stranding max_len-sized rings, which converts
+                       directly into admitted traffic.
+
+      PREFIX SHARING (``prefix_sharing=True``, paged only): a host-side
+      PrefixIndex maps full pages of previously-served prompt prefixes to
+      the physical pages already caching them. Admission looks up the
+      longest page-aligned cached prefix, bumps those pages' refcounts,
+      points the new slot's page-table row at them, and prefills ONLY the
+      suffix from the first divergent page (a partial prefill attending
+      the shared KV through the table — the decode kernel needs no change,
+      sharing is invisible below the table). Retirement/preemption only
+      unref; the index holds its own reference per published page, so hot
+      prefixes survive their publisher. Requires a stack with no SSM
+      blocks (partial prefill cannot resume scanned state).
 
       ``step()`` interleaves: (1) admission — for every free slot (and, when
       paged, enough free pages), pop a request, prefill it at batch=1,
@@ -68,9 +83,9 @@ from repro.launch.scheduler import (
 from repro.models import decode_step, prefill
 from repro.models.kv_cache import assign_slot, init_slot_cache
 from repro.models.paging import (
-    DEFAULT_PAGE_SIZE, PageAllocator, assign_pages, build_page_table,
-    init_paged_cache, n_caching_attn_layers, pages_per_seq,
-    pool_pages_for_budget,
+    DEFAULT_PAGE_SIZE, PageAllocator, PrefixIndex, assign_pages,
+    build_page_table, init_paged_cache, n_caching_attn_layers,
+    pages_per_seq, pool_pages_for_budget,
 )
 
 
@@ -90,6 +105,11 @@ class Engine:
     must then be a power of two. ``expected_len`` is the page budget's
     per-request billing length (default ``max_len`` — conservative; pass
     the workload's typical prompt+generation length to admit more).
+    ``prefix_sharing=True`` (paged, non-SSM stacks) enables copy-on-write
+    prompt-prefix reuse through a PrefixIndex; ``shared_prefix_len`` is
+    the billing hint for it — the prompt-prefix length (tokens) the
+    workload shares, billed ONCE across the fleet instead of per request
+    (scheduler.nbl_page_budget).
 
     Sharding is captured at CONSTRUCTION time: build the engine inside
     ``use_mesh(mesh)`` to get sharded params/caches — an engine built
@@ -106,12 +126,27 @@ class Engine:
                  paged: bool = False,
                  page_size: int = DEFAULT_PAGE_SIZE,
                  expected_len: Optional[int] = None,
-                 bucket_prompts: bool = True):
+                 bucket_prompts: bool = True,
+                 prefix_sharing: bool = False,
+                 shared_prefix_len: int = 0):
         self.paged = bool(paged)
         self.page_size = int(page_size)
         if self.paged and self.page_size & (self.page_size - 1):
             raise ValueError(f"page_size must be a power of two, "
                              f"got {page_size}")
+        self.prefix_sharing = bool(prefix_sharing)
+        if self.prefix_sharing:
+            if not self.paged:
+                raise ValueError("prefix_sharing requires paged=True")
+            if any(b.kind in ("mamba", "cross_attn") for b in cfg.blocks()):
+                # mamba: partial prefill cannot resume scanned state.
+                # cross_attn: prefix KV downstream of a cross-attn block is
+                # conditioned on the request's enc embeddings, but the
+                # index keys on prompt TOKENS only — sharing would reuse
+                # another request's enc-contaminated KV.
+                raise ValueError("prefix_sharing cannot serve SSM or "
+                                 "cross-attention stacks (prefix KV is not "
+                                 "a pure function of prompt tokens)")
         expected_len = int(expected_len or max_len)
 
         n_pages = None
@@ -121,7 +156,9 @@ class Engine:
                                                 self.page_size)
                 budget_slots = nbl_page_budget(
                     cfg, cache_budget_bytes, page_size=self.page_size,
-                    expected_len=expected_len)
+                    expected_len=expected_len,
+                    shared_prefix_len=(shared_prefix_len
+                                       if self.prefix_sharing else 0))
             else:
                 budget_slots = nbl_slot_budget(cfg, cache_budget_bytes,
                                                max_len)
@@ -172,6 +209,8 @@ class Engine:
                                              self.page_size)
             self.slot_pages: list[list[int]] = [[] for _ in
                                                 range(self.n_slots)]
+            self.prefix_index = PrefixIndex(self.page_size) \
+                if self.prefix_sharing else None
             self.cache = init_paged_cache(cfg, self.n_slots, self.max_len,
                                           page_size=self.page_size,
                                           n_pages=self.n_pages)
@@ -184,7 +223,11 @@ class Engine:
         self.finished: dict[int, Request] = {}
         self.n_decode_steps = 0
         self.n_prefills = 0
+        self.n_prefill_tokens = 0      # valid (unpadded) tokens prefilled
         self.n_preemptions = 0
+        self.n_rejected = 0            # admission-time length-guard drops
+        self.n_prefix_hits = 0         # admissions served a cached prefix
+        self.n_shared_prompt_tokens = 0  # prompt tokens skipped via sharing
         self._pool_in_use_sum = 0      # allocator occupancy, per decode step
 
         sharded = bool(mesh_axes())
@@ -268,20 +311,33 @@ class Engine:
         return prompt_len, self.max_len, False
 
     def _prefill_fn(self, token_len: int, cache_len: int, masked: bool,
-                    with_enc: bool):
+                    with_enc: bool, prefix_pages: int = 0):
         """Jit cache keyed on the full prefill plan — the plan is computed
         once per admission in ``_admit`` and passed through, so the cached
         function can never disagree with the caller about cache width or
-        padding masking."""
-        key = (token_len, cache_len, masked, with_enc)
+        padding masking. ``prefix_pages`` > 0 selects the PARTIAL prefill
+        (prefix sharing): the jit additionally takes the engine's paged
+        cache, a (prefix_pages,) physical-page table and the traced prefix
+        token count, and the tokens are the suffix only; the bucket count
+        is a power of two so the jit cache stays O(log²) in the plan."""
+        key = (token_len, cache_len, masked, with_enc, prefix_pages)
         fn = self._prefill_jits.get(key)
         if fn is None:
             cfg, paged = self.cfg, self.paged
 
-            def _prefill(p, tokens, valid_len, enc=None):
-                return prefill(cfg, p, tokens, enc=enc, cache_len=cache_len,
-                               paged=paged,
-                               valid_len=valid_len if masked else None)
+            if prefix_pages:
+                def _prefill(p, tokens, valid_len, pool, ptbl, plen0,
+                             enc=None):
+                    return prefill(cfg, p, tokens, enc=enc,
+                                   cache_len=cache_len, paged=paged,
+                                   valid_len=valid_len if masked else None,
+                                   prefix_cache=pool, prefix_tbl=ptbl,
+                                   prefix_len=plen0)
+            else:
+                def _prefill(p, tokens, valid_len, enc=None):
+                    return prefill(cfg, p, tokens, enc=enc,
+                                   cache_len=cache_len, paged=paged,
+                                   valid_len=valid_len if masked else None)
 
             kw = {}
             if self._sharded:
@@ -289,8 +345,10 @@ class Engine:
                 # prefill returns the POSITION-ALIGNED batch=1 layout even
                 # when paged; its specs are the plain cache ones
                 pcspecs = cache_specs(cache_shapes(cfg, 1, cache_len))
-                ins = (self._pspecs, None, None) + \
-                    ((None,) if with_enc else ())
+                ins = (self._pspecs, None, None)
+                if prefix_pages:
+                    ins += (self._cspecs, None, None)
+                ins += (None,) if with_enc else ()
                 kw = dict(in_shardings=jit_shardings(ins),
                           out_shardings=jit_shardings((None, pcspecs)))
             fn = jax.jit(_prefill, **kw)
@@ -345,15 +403,19 @@ class Engine:
                 self._release_pages(slot)
 
     def _release_pages(self, slot: int) -> None:
+        """Drop this slot's references; a page leaves the pool only when no
+        other slot and no prefix-index entry still references it."""
         if self.slot_pages[slot]:
-            self.allocator.free(self.slot_pages[slot])
+            self.allocator.unref(self.slot_pages[slot])
             self.slot_pages[slot] = []
         self.page_tbl[slot, :] = -1
 
     def _preempt(self, slot: int) -> None:
-        """Evict the request in ``slot`` mid-decode: free its pages and send
-        it back to the queue front. It restarts from its prompt — generated
-        tokens are discarded and the TTFT clock rewinds to unserved."""
+        """Evict the request in ``slot`` mid-decode: unref its pages and
+        send it back to the queue front. It restarts from its prompt —
+        generated tokens are discarded and the TTFT clock rewinds to
+        unserved; the restart is counted on the request so latency_stats
+        can split preempted from clean TTFT."""
         req = self.slot_req[slot]
         assert req is not None
         self._release_pages(slot)
@@ -361,8 +423,29 @@ class Engine:
         req.tokens = []
         req.t_first = 0.0
         req.t_admit = 0.0
+        req.n_preemptions += 1
         self.scheduler.requeue(req)
         self.n_preemptions += 1
+
+    def _reclaim_pages(self, need: int) -> bool:
+        """Free pool capacity without touching in-flight work: evict LRU
+        unreferenced prefix-index entries until ``need`` pages are free.
+        Runs BEFORE any preemption — cached-but-idle prefixes are the
+        cheapest pages to give back. If eviction provably cannot reach
+        ``need`` (an oversized ask), nothing is evicted at all: a request
+        that will defer anyway must not wipe everyone else's warm cache."""
+        if self.allocator.free_pages >= need:
+            return True
+        if not self.prefix_sharing:
+            return False
+        if self.allocator.free_pages + \
+                self.prefix_index.evictable_pages(self.allocator) < need:
+            return False
+        while self.allocator.free_pages < need:
+            if not self.prefix_index.evict_lru(
+                    self.allocator, need - self.allocator.free_pages):
+                return False   # unreachable: the evictable bound is exact
+        return True
 
     def _youngest_active(self) -> int:
         return max(self.active_slots,
@@ -379,7 +462,7 @@ class Engine:
         n_dead = max(0, min(horizon // self.page_size, self._pps))
         dead = [int(p) for p in self.page_tbl[slot, :n_dead] if p >= 0]
         if dead:
-            self.allocator.free(dead)
+            self.allocator.unref(dead)
             self.page_tbl[slot, :n_dead] = -1
             gone = set(dead)
             self.slot_pages[slot] = [p for p in self.slot_pages[slot]
@@ -387,8 +470,11 @@ class Engine:
 
     def _ensure_decode_pages(self) -> None:
         """Allocate the page each active slot's next write lands in; on a
-        dry pool, preempt the youngest request until the fault is served
-        (freeing >= 1 page per preemption, so this terminates)."""
+        dry pool, evict unreferenced prefix-index entries (LRU) first, then
+        preempt the youngest request until the fault is served (each round
+        frees >= 1 page, so this terminates). Decode writes always land at
+        or past a slot's first divergent page, so a faulted page is never
+        a shared one — sharing needs no copy here."""
         for slot in range(self.n_slots):
             if self.slot_req[slot] is None:
                 continue
@@ -403,31 +489,82 @@ class Engine:
                     self.page_tbl[slot, lp] = ids[0]
                     self.slot_pages[slot].append(ids[0])
                     break
+                if self._reclaim_pages(1):
+                    continue
                 self._preempt(self._youngest_active())
 
-    def _admit(self, req: Request, slot: int) -> None:
+    def _prefix_lookup(self, req: Request) -> tuple[int, list[int]]:
+        """Longest page-aligned cached prefix of the prompt; the hit pages
+        are ref'd (pinned) IMMEDIATELY so a subsequent reclaim pass can
+        never evict them between lookup and admission. The pin becomes the
+        slot's reference on admission; the caller must unref on deferral."""
+        if not self.prefix_sharing:
+            return 0, []
+        k, ids = self.prefix_index.lookup(req.prompt)
+        if k:
+            self.allocator.ref(ids)
+        return k, ids
+
+    def _reject(self, req: Request, reason: str) -> None:
+        """Drop an unservable request at admission (the engine-level guard
+        behind Scheduler.submit, which cannot know this engine's max_len):
+        marked errored + finished so run() terminates, excluded from
+        latency percentiles."""
+        req.error = reason
+        req.t_finish = time.monotonic()
+        self.finished[req.rid] = req
+        self.n_rejected += 1
+
+    def _admit(self, req: Request, slot: int, n_shared: int = 0,
+               shared_ids=()) -> None:
         now = time.monotonic()
         req.t_admit = now
         plen = len(req.prompt)
-        token_len, cache_len, masked = self._prefill_plan(plen)
+        ps = self.page_size
+        start = n_shared * ps                    # first suffix position
+        if n_shared:
+            self.page_tbl[slot, :n_shared] = shared_ids
+            self.slot_pages[slot] = list(shared_ids)   # pin -> slot ref
+        suffix = req.prompt[start:] if n_shared else req.prompt
+        token_len, cache_len, masked = self._prefill_plan(len(suffix))
         tokens = np.zeros(token_len, np.int32)
-        tokens[:plen] = req.prompt
+        tokens[:len(suffix)] = suffix
+        pb = _pow2_ceil(n_shared) if n_shared else 0
         fn = self._prefill_fn(token_len, cache_len, masked,
-                              req.enc is not None)
+                              req.enc is not None, prefix_pages=pb)
         args = (self.params, jnp.asarray(tokens)[None],
-                jnp.int32(plen)) + (
-            (jnp.asarray(req.enc)[None],) if req.enc is not None else ())
+                jnp.int32(len(suffix)))
+        if n_shared:
+            ptbl = np.full(pb, -1, np.int32)
+            ptbl[:n_shared] = shared_ids
+            args += (self.cache, jnp.asarray(ptbl), jnp.int32(start))
+        args += (jnp.asarray(req.enc)[None],) if req.enc is not None else ()
         logits, pcache = fn(*args)
         self.n_prefills += 1
+        self.n_prefill_tokens += len(suffix)
+        if n_shared:
+            self.n_prefix_hits += 1
+            self.n_shared_prompt_tokens += start
         if self.paged:
-            npg = pages_per_seq(plen, self.page_size)
-            ids = self.allocator.alloc(npg)
+            npg = pages_per_seq(plen, ps)
+            ids = self.allocator.alloc(npg - n_shared)
             assert ids is not None, "admission checked page availability"
-            self.page_tbl[slot, :npg] = ids
-            self.slot_pages[slot] = list(ids)
+            self.page_tbl[slot, n_shared:npg] = ids
+            self.slot_pages[slot].extend(ids)    # [] or the shared prefix
             afn = self._assign_paged_fn(cache_len)
+            # suffix tiles map to logical pages [n_shared, ...): hand the
+            # assign jit the table row from the first divergent page,
+            # right-padded back to the (static) full row width
+            row = np.full(self._pps, -1, np.int32)
+            row[:self._pps - n_shared] = self.page_tbl[slot, n_shared:]
             self.cache = afn(self.cache, pcache, jnp.int32(slot),
-                             jnp.asarray(self.page_tbl[slot]))
+                             jnp.asarray(row))
+            if self.prefix_sharing and plen // ps:
+                # publish every FULL prompt page (shared ones are already
+                # indexed; new nodes take the index's own reference)
+                self.prefix_index.insert(req.prompt,
+                                         self.page_tbl[slot, :plen // ps],
+                                         self.allocator)
         else:
             self.cache = self._assign_jit(self.cache, pcache,
                                           jnp.int32(slot))
@@ -436,20 +573,22 @@ class Engine:
         tok = self._sample(np.asarray(logits[0, -1], np.float32))
         self._emit(req, slot, tok, time.monotonic())
 
-    def _can_admit(self, req: Request) -> bool:
-        """Paged admission gate: the prompt's pages must be free, plus one
-        page of headroom per in-flight request (each may fault a page on
-        the next boundary — admitting into that reserve would just trade
-        the admission for a preemption). A page-aligned prompt faults a
-        fresh page on its very first decode write, so it counts in the
-        reserve too."""
+    def _can_admit(self, req: Request, n_shared: int = 0) -> bool:
+        """Paged admission gate, in REFERENCED pages (shared prefix pages
+        are already referenced and bill nothing here): the prompt's NEW
+        pages must be free, plus one page of headroom per in-flight request
+        (each may fault a page on the next boundary — admitting into that
+        reserve would just trade the admission for a preemption). A
+        page-aligned prompt faults a fresh page on its very first decode
+        write, so it counts in the reserve too. Under pressure, LRU
+        unreferenced prefix-index entries are reclaimed before giving up."""
         if not self.paged:
             return True
         plen = len(req.prompt)
         npg = pages_per_seq(plen, self.page_size)
         own_fault = 1 if plen % self.page_size == 0 else 0
-        return self.allocator.free_pages >= (npg + own_fault
-                                             + len(self.active_slots))
+        need = (npg - n_shared) + own_fault + len(self.active_slots)
+        return self.allocator.free_pages >= need or self._reclaim_pages(need)
 
     def step(self) -> int:
         """One engine iteration: admit into free slots, then one batched
@@ -460,11 +599,22 @@ class Engine:
         pending = self.scheduler.admit(len(free))
         while pending:
             req = pending.pop(0)
-            if not self._can_admit(req):
+            if len(req.prompt) + req.max_new > self.max_len:
+                # length guard at ADMISSION: requests submitted directly to
+                # the scheduler bypass Engine.submit's check and would
+                # otherwise index past the page table mid-decode
+                self._reject(req, f"prompt({len(req.prompt)}) + max_new"
+                             f"({req.max_new}) exceeds max_len"
+                             f"={self.max_len}")
+                continue
+            n_shared, shared_ids = self._prefix_lookup(req)
+            if not self._can_admit(req, n_shared):
+                if n_shared:
+                    self.allocator.unref(shared_ids)   # drop the pin
                 for r in reversed([req] + pending):   # restore FIFO order
                     self.scheduler.requeue(r)
                 break
-            self._admit(req, free.pop())
+            self._admit(req, free.pop(), n_shared, shared_ids)
             emitted += 1                       # prefill emits a first token
 
         if self.paged:
@@ -507,7 +657,9 @@ class Engine:
     def stats(self) -> dict:
         s = latency_stats(list(self.finished.values()))
         s.update(n_slots=self.n_slots, n_decode_steps=self.n_decode_steps,
-                 n_prefills=self.n_prefills)
+                 n_prefills=self.n_prefills,
+                 n_prefill_tokens=self.n_prefill_tokens,
+                 n_rejected=self.n_rejected)
         if self.paged:
             s.update(
                 n_pages=self.n_pages,
@@ -517,4 +669,8 @@ class Engine:
                 pool_utilization=(self._pool_in_use_sum
                                   / max(1, self.n_decode_steps)
                                   / max(1, self.n_pages)))
+        if self.prefix_sharing:
+            s.update(n_prefix_hits=self.n_prefix_hits,
+                     n_shared_prompt_tokens=self.n_shared_prompt_tokens,
+                     prefix_index_entries=self.prefix_index.n_entries)
         return s

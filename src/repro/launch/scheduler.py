@@ -17,13 +17,14 @@ ring (slot) budget — one full-length cache ring reserved per request:
 
 page budget — the paged engine (models/paging.py) reserves nothing up
 front; the pool is sized in pages and a request is billed only the pages an
-*expected* generation length actually covers:
+*expected* generation length actually REFERENCES — under prefix sharing the
+workload's common prompt-prefix pages are billed once against the pool, not
+once per request:
 
     pool_pages  = budget_bytes // (caching_layers * page_bytes)
-    per_request = ceil(expected_len / page_size)        # per layer, but
-                                                        # allocation is
-                                                        # layer-synchronized
-    n_requests  = clamp(pool_pages // per_request, 1, max_slots)
+    shared      = shared_prefix_len // page_size        # billed ONCE
+    per_request = ceil(expected_len / page_size) - shared
+    n_requests  = clamp((pool_pages - shared) // per_request, 1, max_slots)
 
 NBL-linearized layers carry NO cache (kv_cache.py) and NO page pool, so
 compressing m of K attention layers shrinks the per-request bill by ≈ m/K
@@ -59,6 +60,12 @@ class Request:
     t_first: float = 0.0
     t_finish: float = 0.0
     tokens: list = field(default_factory=list)
+    # engine-filled lifecycle outcomes: preemption restarts (the TTFT clock
+    # rewound this many times — latency_stats splits these out so restart
+    # latency cannot silently pollute paged-vs-ring comparisons) and the
+    # admission-time rejection reason (None = served).
+    n_preemptions: int = 0
+    error: Optional[str] = None
 
     @property
     def latency(self) -> float:
@@ -81,22 +88,33 @@ def nbl_slot_budget(cfg: ModelConfig, budget_bytes: int, max_len: int,
 
 
 def nbl_page_budget(cfg: ModelConfig, budget_bytes: int, *, page_size: int,
-                    expected_len: int, max_slots: int = 256) -> int:
+                    expected_len: int, max_slots: int = 256,
+                    shared_prefix_len: int = 0) -> int:
     """Concurrent-request count a byte budget buys under PAGED allocation.
 
     The budget is converted to a per-layer pool size (pages) across the
     stack's caching attention layers, then divided by the pages one request
-    of ``expected_len`` tokens occupies. Linearized (nbl/drop) layers
+    of ``expected_len`` tokens REFERENCES. Linearized (nbl/drop) layers
     contribute zero to the page bill, so the count is monotone in NBL-m;
     stacks with no caching attention at all clamp to ``max_slots``. Note
     the unit covers attention KV only — O(1)-per-slot SSM/conv/cross state
     is not paged (models/paging.py) and is negligible at serving lengths.
+
+    ``shared_prefix_len`` (prefix sharing) is the workload's common
+    prompt-prefix length in tokens: its full pages are billed ONCE against
+    the pool — every request references the same physical pages — instead
+    of once per request, so a fleet sharing a long system prompt admits
+    close to pool/(unique pages per request) concurrent requests.
     """
     from repro.models.paging import pages_per_seq, pool_pages_for_budget
     pool = pool_pages_for_budget(cfg, budget_bytes, page_size)
     if pool is None:
         return max_slots
-    per_req = pages_per_seq(max(1, expected_len), page_size)
+    shared_pages = min(max(0, shared_prefix_len),
+                       max(1, expected_len)) // page_size
+    pool = max(0, pool - shared_pages)            # the shared pages, once
+    per_req = max(1, pages_per_seq(max(1, expected_len), page_size)
+                  - shared_pages)
     return int(max(1, min(max_slots, pool // per_req)))
 
 
@@ -149,11 +167,19 @@ def latency_stats(requests: list[Request]) -> dict:
     """requests/s + latency/TTFT percentiles + per-request decode speed over
     a finished request set. Tail TTFT (p99) and per-request decode tokens/s
     are the evidence the paged-vs-ring comparison needs: paging admits more
-    requests (better tail TTFT) at the possible cost of preemption restarts
-    (visible as decode-rate outliers)."""
-    done = [r for r in requests if r.t_finish > 0]
+    requests (better tail TTFT) at the possible cost of preemption restarts.
+
+    Preempted requests (``n_preemptions > 0`` — their TTFT clock was
+    rewound and includes at least one full restart) are counted separately:
+    ``n_preempted_requests`` plus ``p99_ttft_preempted_s`` over just that
+    subset, so restart latency is visible instead of silently skewing the
+    headline percentiles' interpretation. Rejected requests (``error`` set)
+    never served and are excluded from every percentile; they surface as
+    ``n_rejected``."""
+    rejected = [r for r in requests if r.error is not None]
+    done = [r for r in requests if r.t_finish > 0 and r.error is None]
     if not done:
-        return {"n": 0}
+        return {"n": 0, "n_rejected": len(rejected)}
     lat = np.array([r.latency for r in done])
     ttft = np.array([r.ttft for r in done])
     # decode rate excludes the prefill-emitted first token; requests that
@@ -162,15 +188,21 @@ def latency_stats(requests: list[Request]) -> dict:
                     for r in done if len(r.tokens) > 1])
     span = (max(r.t_finish for r in done)
             - min(r.t_submit for r in done)) or 1e-9
+    preempted = [r for r in done if r.n_preemptions > 0]
     out = {
         "n": len(done),
+        "n_rejected": len(rejected),
         "requests_per_s": len(done) / span,
         "tokens_per_s": sum(len(r.tokens) for r in done) / span,
         "p50_latency_s": float(np.percentile(lat, 50)),
         "p99_latency_s": float(np.percentile(lat, 99)),
         "p50_ttft_s": float(np.percentile(ttft, 50)),
         "p99_ttft_s": float(np.percentile(ttft, 99)),
+        "n_preempted_requests": len(preempted),
     }
+    if preempted:
+        pttft = np.array([r.ttft for r in preempted])
+        out["p99_ttft_preempted_s"] = float(np.percentile(pttft, 99))
     if dec.size:
         out["decode_tok_s_p50"] = float(np.percentile(dec, 50))
         out["decode_tok_s_min"] = float(dec.min())

@@ -51,6 +51,11 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
       serve_paged -> {"token", "pos", "page_tbl", "cache"}   (page-pool
                      cache sized for full reservation; page_tbl maps each
                      slot's logical pages to physical pool pages)
+      prefill_shared -> {"tokens", "prefix_tbl", "prefix_len", "cache"}
+                     (prefix-sharing partial prefill: a batch of suffixes,
+                     each seq_len tokens at absolute positions past a
+                     shared seq_len-token prompt prefix whose pages —
+                     prefix_tbl — are already resident in the paged pools)
     """
     b, s = shape.global_batch, shape.seq_len
     dt = jnp.dtype(cfg.compute_dtype)
@@ -80,4 +85,13 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
                 "pos": sds((b,), jnp.int32),
                 "page_tbl": sds((b, pps), jnp.int32),
                 "cache": paged_cache_shapes(cfg, b, s)}
+    if shape.kind == "prefill_shared":
+        from repro.models.paging import DEFAULT_PAGE_SIZE, pages_per_seq
+        pps = pages_per_seq(s, DEFAULT_PAGE_SIZE)
+        # pools hold the shared prefix (s tokens, billed once) plus each
+        # suffix's pages — the 2*s max_len sizes the per-slot table rows
+        return {"tokens": sds((b, s), jnp.int32),
+                "prefix_tbl": sds((pps,), jnp.int32),
+                "prefix_len": sds((), jnp.int32),
+                "cache": paged_cache_shapes(cfg, b, 2 * s)}
     raise ValueError(shape.kind)

@@ -183,8 +183,18 @@ _flash_xla.defvjp(_flash_fwd, _flash_bwd)
 
 
 def self_attention(cfg, p: dict, x: jax.Array, *, window: Optional[int],
-                   positions: jax.Array, chunk: int = 1024) -> jax.Array:
-    """Full-sequence causal self-attention. x: (B, S, d)."""
+                   positions: jax.Array, chunk: int = 1024,
+                   prefix=None) -> jax.Array:
+    """Causal self-attention over x: (B, S, d) at absolute ``positions``.
+
+    ``prefix`` serves the engine's partial (suffix-only) prefill under
+    prefix sharing: a (k_pre, v_pre, kpos_pre) triple of already-cached
+    prefix KV — k/v (B or 1, KV, P, hd), kpos_pre (P,) absolute key
+    positions with -1 = invalid. Queries then attend [prefix ++ suffix]
+    keys; causality/window stay purely positional, so suffix tokens at
+    positions >= prefix length score against the shared prefix exactly as
+    a full prefill would. The returned KV cache covers the SUFFIX only
+    (the prefix is already paged in and never rewritten)."""
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q = _split_heads(x @ p["wq"], h, hd)
     k = _split_heads(x @ p["wk"], kv, hd)
@@ -194,10 +204,25 @@ def self_attention(cfg, p: dict, x: jax.Array, *, window: Optional[int],
     q = constrain(q, "dp", "model", None, None)
     k = constrain(k, "dp", "model", None, None)
     scale = cfg.attn_scale or hd ** -0.5
-    out = _chunked_attention(q, k, v, positions, positions,
+    b, s, _ = x.shape
+    if prefix is None:
+        kk, vv, kpos = k, v, positions
+    else:
+        k_pre, v_pre, kpos_pre = prefix
+        k_pre = jnp.broadcast_to(k_pre, (b,) + k_pre.shape[1:])
+        v_pre = jnp.broadcast_to(v_pre, (b,) + v_pre.shape[1:])
+        kk = jnp.concatenate([k_pre.astype(k.dtype), k], axis=2)
+        vv = jnp.concatenate([v_pre.astype(v.dtype), v], axis=2)
+        kpos = jnp.concatenate([kpos_pre.astype(jnp.int32), positions])
+        # total key length is a sum of page multiples, not a power of two:
+        # one chunk when it fits, else the largest power-of-two divisor so
+        # the scan tiles evenly (t & -t alone would degrade to 1-key chunks
+        # for odd unbucketed suffixes)
+        t = kk.shape[2]
+        chunk = t if t <= chunk else min(chunk, t & -t)
+    out = _chunked_attention(q, kk, vv, positions, kpos,
                              window=window, cap=cfg.attn_logit_softcap,
                              scale=scale, causal=True, chunk=chunk)
-    b, s, _ = x.shape
     out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
     return out @ p["wo"], (k, v)
 

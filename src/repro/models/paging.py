@@ -1,13 +1,43 @@
-"""Paged KV-cache subsystem: global page pools + host-side page allocator.
+"""Paged KV-cache subsystem: page pools, refcounted allocator, prefix index.
 
 Block-paged KV management (the PagedAttention design) replaces the serving
 engine's one-ring-per-slot reservation with a *pool* of fixed-size pages per
-attention layer. A request owns only the pages that cover the tokens it has
-actually produced, so short requests stop stranding the HBM the scheduler
-budgeted for ``max_len`` — and the freed memory converts into admitted
-traffic. The saving composes multiplicatively with NBL: linearized layers
-carry NO pool at all (paper §4.2), so m of K layers linearized shrinks the
-per-request page bill by m/K on top of the page-granular allocation.
+attention layer. A request REFERENCES only the pages that cover the tokens
+it has actually produced, so short requests stop stranding the HBM the
+scheduler budgeted for ``max_len`` — and the freed memory converts into
+admitted traffic. The saving composes multiplicatively with NBL: linearized
+layers carry NO pool at all (paper §4.2), so m of K layers linearized
+shrinks the per-request page bill by m/K on top of the page-granular
+allocation — and, under prefix sharing, the reduction applies to the shared
+pool too (shared pages exist only in caching attention layers).
+
+Reference semantics (copy-on-write prefix sharing)
+--------------------------------------------------
+Pages are REFCOUNTED, not owned. ``PageAllocator.alloc`` hands out pages at
+refcount 1; ``ref`` pins extra holders; ``unref`` (alias ``free``) drops
+one reference and a page returns to the free list only at refcount 0. Both
+``ref`` and ``unref`` are ATOMIC: the whole id list — including duplicate
+ids within one call — is validated against current refcounts before any
+mutation, so a rejected call leaves the allocator exactly as it found it.
+
+Sharing is copy-on-write by construction rather than by copying: a shared
+page is always a FULL prompt-prefix page, and every writer (suffix prefill,
+decode) lands at positions at or beyond its slot's first divergent page, so
+shared pages are never written after publication — a "write" to a shared
+logical range is simply a fresh page for the writing slot. The last
+(partial) page of a prompt is never shared.
+
+``PrefixIndex`` is the host-side radix/trie over prompt-token page-chunks:
+each full page of a previously-served prompt prefix maps its ``page_size``
+tokens to the physical page that caches them. The index holds one
+reference per mapped page, so published prefixes survive the publishing
+request's retirement (the retiring slot only ``unref``s). On admission the
+engine looks up the longest page-aligned cached prefix, ``ref``s the hit
+pages, points the new slot's page-table row at them, and prefills only the
+suffix. Under pool pressure, UNREFERENCED index entries (refcount 1 — held
+by nothing but the index) are evicted leaf-first in LRU order BEFORE any
+request is preempted; billing (launch/scheduler.nbl_page_budget) counts
+pages referenced with shared pages billed once.
 
 Layout
 ------
@@ -175,18 +205,26 @@ class DoubleFreeError(RuntimeError):
 
 @dataclass
 class PageAllocator:
-    """Host-side free-list allocator over physical page ids [0, n_pages).
+    """Host-side REFCOUNTED free-list allocator over page ids [0, n_pages).
 
     alloc is all-or-nothing (returns None when the pool cannot satisfy the
-    request — the caller preempts or defers); free rejects double-frees and
-    foreign ids. Slot retirement is copy-free: pages go back on the free
-    list untouched, and isolation is guaranteed by position masking (a
-    reallocated page's stale tokens sit at positions the new owner has not
-    reached, hence masked; they are overwritten before ever becoming valid).
+    request — the caller reclaims or defers) and hands pages out at
+    refcount 1. ``ref`` pins additional holders (prefix sharing: a slot
+    pointing its page table at an already-cached prefix, or the prefix
+    index publishing a page); ``unref`` — ``free`` is an alias — drops one
+    reference, and the page returns to the free list only at refcount 0.
+
+    ref/unref are ATOMIC: the whole id list is validated first (duplicate
+    ids in one call count once per occurrence against the refcount), so a
+    rejected call never leaves the allocator half-mutated. Retirement stays
+    copy-free: a page released at refcount 0 goes back untouched, and
+    isolation is positional (a reallocated page's stale tokens sit at
+    positions the new holder has not reached, hence masked; they are
+    overwritten before ever becoming valid).
     """
     n_pages: int
     _free: list = field(default_factory=list)
-    _used: set = field(default_factory=set)
+    _refs: dict = field(default_factory=dict)     # pid -> refcount >= 1
     peak_in_use: int = 0
 
     def __post_init__(self):
@@ -198,7 +236,10 @@ class PageAllocator:
 
     @property
     def in_use(self) -> int:
-        return len(self._used)
+        return len(self._refs)
+
+    def refcount(self, pid: int) -> int:
+        return self._refs.get(pid, 0)
 
     def alloc(self, n: int) -> Optional[list[int]]:
         if n < 0:
@@ -206,23 +247,191 @@ class PageAllocator:
         if n > len(self._free):
             return None
         ids = [self._free.pop() for _ in range(n)]
-        self._used.update(ids)
-        self.peak_in_use = max(self.peak_in_use, len(self._used))
+        for pid in ids:
+            self._refs[pid] = 1
+        self.peak_in_use = max(self.peak_in_use, len(self._refs))
         return ids
 
-    def free(self, ids) -> None:
-        for pid in ids:
-            if pid not in self._used:
+    def ref(self, ids) -> None:
+        """Add one reference per occurrence of each id. Atomic: every id
+        must be allocated or nothing is referenced."""
+        ids = list(ids)
+        for pid in ids:                           # validate, then mutate
+            if pid not in self._refs:
                 raise DoubleFreeError(f"page {pid} is not allocated")
-            self._used.discard(pid)
-            self._free.append(pid)
+        for pid in ids:
+            self._refs[pid] += 1
+
+    def unref(self, ids) -> None:
+        """Drop one reference per occurrence of each id; a page returns to
+        the free list at refcount 0. Atomic: the whole list — duplicate ids
+        counted per occurrence — is validated against current refcounts
+        before any mutation, so a raising call changes nothing."""
+        ids = list(ids)
+        need: dict = {}
+        for pid in ids:
+            need[pid] = need.get(pid, 0) + 1
+        for pid, n in need.items():               # validate, then mutate
+            if self._refs.get(pid, 0) < n:
+                raise DoubleFreeError(
+                    f"page {pid}: {n} release(s) requested but refcount is "
+                    f"{self._refs.get(pid, 0)}")
+        for pid in ids:
+            self._refs[pid] -= 1
+            if self._refs[pid] == 0:
+                del self._refs[pid]
+                self._free.append(pid)
+
+    free = unref                                  # pre-refcount API name
 
     def check_invariants(self) -> None:
-        """Free-list conservation: used and free partition [0, n_pages)."""
+        """Free-list conservation: referenced and free pages partition
+        [0, n_pages), and every live refcount is >= 1."""
         free = set(self._free)
         assert len(free) == len(self._free), "duplicate ids on free list"
-        assert not (free & self._used), "page both free and used"
-        assert free | self._used == set(range(self.n_pages)), "page lost"
+        assert not (free & self._refs.keys()), "page both free and referenced"
+        assert free | self._refs.keys() == set(range(self.n_pages)), \
+            "page lost"
+        assert all(c >= 1 for c in self._refs.values()), "zombie refcount"
+
+
+# ---------------------------------------------------------- prefix index ---
+
+class _TrieNode:
+    __slots__ = ("children", "page", "last_used")
+
+    def __init__(self, page: int, clock: int):
+        self.children: dict = {}                  # chunk tokens -> _TrieNode
+        self.page = page                          # physical page id
+        self.last_used = clock
+
+
+class PrefixIndex:
+    """Host-side radix/trie over prompt-token page-chunks.
+
+    Each node maps one FULL page of a previously-served prompt prefix —
+    keyed by its ``page_size`` token values, position-implicit through its
+    trie depth — to the physical page already holding that prefix's KV in
+    every caching layer (allocation is layer-synchronized, so one id names
+    the page in all pools). The index holds ONE allocator reference per
+    mapped page (taken at ``insert``), which is what lets a published
+    prefix outlive the request that prefilled it.
+
+    ``lookup`` returns the longest page-aligned cached prefix of a prompt,
+    capped at ``(len(prompt) - 1) // page_size`` pages so the admission
+    suffix always contains at least the final prompt token (its logits seed
+    decoding); the last (partial) page is never indexed at all. ``evict_lru``
+    drops the least-recently-used leaf whose page nothing but the index
+    references (refcount 1) — leaf-first keeps every surviving node
+    reachable from the root, and skipping still-referenced pages means
+    eviction only runs when it actually frees pool capacity.
+    """
+
+    def __init__(self, page_size: int):
+        self.page_size = int(page_size)
+        self.root: dict = {}                      # chunk tokens -> _TrieNode
+        self._clock = 0
+        self.n_entries = 0
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _chunk(self, prompt, i: int) -> tuple:
+        ps = self.page_size
+        return tuple(int(t) for t in prompt[i * ps:(i + 1) * ps])
+
+    def lookup(self, prompt) -> tuple[int, list[int]]:
+        """Longest cached page-aligned proper prefix of ``prompt``: returns
+        (n_pages, physical ids). Touches each hit node's LRU stamp."""
+        max_k = max(0, (len(prompt) - 1) // self.page_size)
+        node_map, ids = self.root, []
+        now = self._tick()
+        for i in range(max_k):
+            node = node_map.get(self._chunk(prompt, i))
+            if node is None:
+                break
+            node.last_used = now
+            ids.append(node.page)
+            node_map = node.children
+        return len(ids), ids
+
+    def insert(self, prompt, page_ids, allocator: PageAllocator) -> int:
+        """Publish every FULL page of ``prompt`` (len // page_size chunks;
+        ``page_ids[i]`` is chunk i's physical page). Newly-created nodes
+        take one allocator reference; chunks already indexed keep their
+        existing mapping (identical tokens at identical positions produce
+        identical KV, so either physical page is valid — the incumbent
+        stays, avoiding a ref/unref churn). Returns #new entries."""
+        n_full = len(prompt) // self.page_size
+        node_map, added = self.root, 0
+        now = self._tick()
+        for i in range(n_full):
+            key = self._chunk(prompt, i)
+            node = node_map.get(key)
+            if node is None:
+                pid = int(page_ids[i])
+                allocator.ref([pid])
+                node = _TrieNode(pid, now)
+                node_map[key] = node
+                self.n_entries += 1
+                added += 1
+            else:
+                node.last_used = now
+            node_map = node.children
+        return added
+
+    def evictable_pages(self, allocator: PageAllocator) -> int:
+        """EXACT count of pages leaf-first eviction could free: an entry is
+        reclaimable iff its page has refcount 1 AND its whole subtree is
+        reclaimable — an rc-1 node above a still-referenced descendant
+        (possible under SWA window release, where a slot drops a parent
+        page but keeps referencing a child's) never becomes a leaf while
+        that descendant lives. Exactness is what lets _reclaim_pages keep
+        its all-or-nothing promise: a reclaim that would fall short evicts
+        nothing."""
+        nodes = []                                # parents before children
+        stack = [self.root]
+        while stack:
+            node_map = stack.pop()
+            for node in node_map.values():
+                nodes.append(node)
+                if node.children:
+                    stack.append(node.children)
+        ok: dict = {}                             # id(node) -> reclaimable
+        count = 0
+        for node in reversed(nodes):              # children first
+            r = allocator.refcount(node.page) == 1 and \
+                all(ok[id(c)] for c in node.children.values())
+            ok[id(node)] = r
+            count += r
+        return count
+
+    def evict_lru(self, allocator: PageAllocator, max_pages: int = 1) -> int:
+        """Drop up to ``max_pages`` LRU *leaf* entries whose pages only the
+        index references (refcount 1), unref'ing their pages back to the
+        free list — one trie walk collects every candidate, so reclaiming
+        k pages costs one traversal per cascade level (evicting a leaf can
+        expose its parent), not one per page. Returns the number of pages
+        freed; 0 means no evictable leaf exists and the caller must fall
+        back to preemption."""
+        cand: list[tuple] = []                    # (last_used, parent, key)
+        stack = [self.root]                       # iterative: a prefix can
+        while stack:                              # be 1000s of pages deep
+            node_map = stack.pop()
+            for key, node in node_map.items():
+                if node.children:
+                    stack.append(node.children)
+                elif allocator.refcount(node.page) == 1:
+                    cand.append((node.last_used, node_map, key))
+        cand.sort(key=lambda c: c[0])
+        freed = 0
+        for _, parent, key in cand[:max(0, max_pages)]:
+            node = parent.pop(key)
+            self.n_entries -= 1
+            allocator.unref([node.page])
+            freed += 1
+        return freed
 
 
 # --------------------------------------------------------------- stats ------

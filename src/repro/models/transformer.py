@@ -141,13 +141,17 @@ def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
 
 def _block_fwd(cfg: ModelConfig, blk: Block, p, x, *, mode: str,
                positions, enc, cache, pos, cache_len: int,
-               page_tbl=None, paged: bool = False, valid_len=None):
+               page_tbl=None, paged: bool = False, valid_len=None,
+               prefix_tbl=None, prefix_len=None):
     """Returns (x, new_cache, aux). ``cache`` is this block's slice.
 
     ``page_tbl``/``paged``/``valid_len`` serve the paged engine: a decode
     cache holding page pools (key "k_pages") dispatches to the paged kernel;
     a paged prefill keeps full-width position-aligned caches (no ring wrap);
     ``valid_len`` masks bucket-padding tokens out of the prefill cache.
+    ``prefix_tbl``/``prefix_len`` serve the PARTIAL prefill under prefix
+    sharing: in prefill mode ``cache`` is then this layer's page pools and
+    the attention gathers the shared-prefix KV through the table.
     """
     aux = jnp.zeros((), jnp.float32)
     new_cache = None
@@ -164,8 +168,11 @@ def _block_fwd(cfg: ModelConfig, blk: Block, p, x, *, mode: str,
                 h, new_cache = decode_attention(cfg, p["mixer"], h, cache,
                                                 pos, window=blk.window)
         else:
+            prefix = None
+            if mode == "prefill" and prefix_tbl is not None:
+                prefix = _gather_prefix(cache, prefix_tbl, prefix_len)
             h, (k, v) = self_attention(cfg, p["mixer"], h, window=blk.window,
-                                       positions=positions)
+                                       positions=positions, prefix=prefix)
             if mode == "prefill":
                 new_cache = _ring_cache(cfg, blk, k, v, cache_len,
                                         paged=paged, valid_len=valid_len)
@@ -207,6 +214,25 @@ def _block_fwd(cfg: ModelConfig, blk: Block, p, x, *, mode: str,
         y, aux = moe_ffn(cfg, p["ffn"], h)
         x = x + y.astype(x.dtype)
     return x, new_cache, aux
+
+
+def _gather_prefix(pool: dict, prefix_tbl, prefix_len):
+    """Gather shared-prefix KV for a partial prefill: ``pool`` is one
+    layer's page pools {k_pages, v_pages: (n_pages, KV, ps, hd)};
+    ``prefix_tbl`` (Pb,) physical ids (-1 = past the prefix, clip-gathered
+    and masked); ``prefix_len`` traced token count. Returns (k, v, kpos)
+    with k/v (1, KV, Pb*ps, hd) and kpos -1 beyond prefix_len."""
+    assert pool is not None and "k_pages" in pool, \
+        "partial prefill needs the paged pools"
+    idx = jnp.clip(jnp.asarray(prefix_tbl, jnp.int32), 0)
+    kg = pool["k_pages"][idx]                     # (Pb, KV, ps, hd)
+    vg = pool["v_pages"][idx]
+    pb, kv, ps, hd = kg.shape
+    kg = kg.transpose(1, 0, 2, 3).reshape(1, kv, pb * ps, hd)
+    vg = vg.transpose(1, 0, 2, 3).reshape(1, kv, pb * ps, hd)
+    t = jnp.arange(pb * ps, dtype=jnp.int32)
+    kpos = jnp.where(t < jnp.asarray(prefix_len, jnp.int32), t, -1)
+    return kg, vg, kpos
 
 
 def _ring_cache(cfg: ModelConfig, blk: Block, k, v, cache_len: int, *,
@@ -252,7 +278,8 @@ def _ring_cache(cfg: ModelConfig, blk: Block, k, v, cache_len: int, *,
 def _stack_fwd(cfg: ModelConfig, params: dict, x, *, mode: str,
                positions=None, enc=None, cache=None, pos=None,
                cache_len: int = 0, remat: bool = False,
-               page_tbl=None, paged: bool = False, valid_len=None):
+               page_tbl=None, paged: bool = False, valid_len=None,
+               prefix_tbl=None, prefix_len=None):
     """Run the full stack. Returns (x, new_cache_or_None, aux_sum)."""
     aux_total = jnp.zeros((), jnp.float32)
     new_groups = []
@@ -270,7 +297,8 @@ def _stack_fwd(cfg: ModelConfig, params: dict, x, *, mode: str,
                 xc, nc, aux_u = _block_fwd(
                     cfg, blk, p_u, xc, mode=mode, positions=positions,
                     enc=enc, cache=c_u, pos=pos, cache_len=cache_len,
-                    page_tbl=page_tbl, paged=paged, valid_len=valid_len)
+                    page_tbl=page_tbl, paged=paged, valid_len=valid_len,
+                    prefix_tbl=prefix_tbl, prefix_len=prefix_len)
                 auxc = auxc + aux_u
                 outs.append(nc)
             return (xc, auxc), outs
@@ -339,7 +367,8 @@ def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *,
 
 def prefill(cfg: ModelConfig, params: dict, tokens, *, enc=None,
             cache_len: Optional[int] = None, paged: bool = False,
-            valid_len=None):
+            valid_len=None, prefix_cache=None, prefix_tbl=None,
+            prefix_len=None):
     """Process the prompt, build KV/state caches, return last-token logits.
     Logits are computed at the final position only (vocab-size safe at 32k+
     contexts). Returns (logits (B,1,V), cache).
@@ -351,15 +380,34 @@ def prefill(cfg: ModelConfig, params: dict, tokens, *, enc=None,
     ``valid_len - 1`` and cache entries at positions >= valid_len are
     masked unattendable, so one jit serves every prompt length in the
     bucket. Not valid for SSM stacks (padding corrupts the scanned state).
+
+    PARTIAL prefill (prefix sharing): with ``prefix_cache`` (the paged
+    cache tree), ``prefix_tbl`` ((Pb,) int32 physical page per logical
+    prefix page, -1 padding) and ``prefix_len`` (traced token count, a
+    page multiple), ``tokens`` holds only the SUFFIX from the first
+    divergent page — embedded at absolute positions prefix_len + i and
+    attending the shared prefix KV through the table. The returned cache
+    covers the suffix only; ``valid_len`` then counts valid SUFFIX tokens
+    and logits come from suffix position valid_len - 1. Requires a
+    stack with no SSM blocks (their scanned state cannot resume
+    mid-sequence).
     """
     cache_len = cache_len or tokens.shape[1]
     dt = jnp.dtype(cfg.compute_dtype)
     x = embed_tokens(params["embed"], tokens, dt)
     positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    if prefix_tbl is not None:
+        assert paged, "partial prefill is a paged-engine path"
+        assert not any(b.kind == "mamba" for b in cfg.blocks()), \
+            "partial prefill cannot resume SSM state mid-sequence"
+        positions = positions + jnp.asarray(prefix_len, jnp.int32)
     x, cache, _ = _stack_fwd(cfg, params, x, mode="prefill",
                              positions=positions, enc=enc,
+                             cache=prefix_cache if prefix_tbl is not None
+                             else None,
                              cache_len=cache_len, paged=paged,
-                             valid_len=valid_len)
+                             valid_len=valid_len, prefix_tbl=prefix_tbl,
+                             prefix_len=prefix_len)
     if valid_len is None:
         x_last = x[:, -1:]
     else:

@@ -257,6 +257,37 @@ print('OK')
 """, n_devices=4)
 
 
+@pytest.mark.parametrize("paged", [False, True])
+def test_direct_scheduler_submit_overflow_rejected(paged):
+    """Regression: a request submitted DIRECTLY to the scheduler (the
+    benchmark construction path) with prompt + max_new > max_len used to
+    bypass Engine.submit's guard and decode past max_len — a host-side
+    IndexError into the page table mid-serve. The engine now validates at
+    admission: the oversize request is rejected (error set, excluded from
+    latency percentiles) and every other request still completes."""
+    from repro.launch.scheduler import latency_stats
+
+    cfg, params = _setup()
+    good, big = _prompts(cfg, [5, 14], seed=17)
+    ref = _ref(cfg, params, good, 4)
+
+    kw = dict(paged=True, page_size=4) if paged else {}
+    eng = Engine(cfg, params, max_len=16, n_slots=1, **kw)
+    rid_bad = eng.scheduler.submit(big, 10)      # 14 + 10 > 16
+    rid_ok = eng.submit(good, 4)
+    out = eng.run(max_steps=200)                 # must not raise
+    np.testing.assert_array_equal(out[rid_ok], ref)
+    assert eng.n_rejected == 1
+    bad = eng.finished[rid_bad]
+    assert bad.error is not None and "max_len" in bad.error
+    assert len(bad.tokens) == 0
+    s = latency_stats(list(eng.finished.values()))
+    assert s["n"] == 1 and s["n_rejected"] == 1  # percentiles exclude it
+    # Engine.submit still rejects eagerly
+    with pytest.raises(ValueError):
+        eng.submit(big, 10)
+
+
 def test_scheduler_fifo_and_prefill_cap():
     sched = Scheduler(max_prefill_per_step=2)
     for i in range(5):

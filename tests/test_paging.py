@@ -1,6 +1,7 @@
 """Paged KV-cache subsystem: kernel parity, engine parity vs the ring
-decode path, recycled-page isolation, allocator invariants, page budget,
-preemption, and prompt-length bucketing."""
+decode path, recycled-page isolation, refcounted allocator invariants,
+prefix sharing (copy-on-write pages), page budget, preemption, and
+prompt-length bucketing."""
 from __future__ import annotations
 
 import jax
@@ -17,8 +18,8 @@ from repro.launch.scheduler import latency_stats, nbl_page_budget, Request
 from repro.launch.serve import generate
 from repro.models import init_params
 from repro.models.paging import (
-    DoubleFreeError, PageAllocator, n_caching_attn_layers, page_bytes,
-    pages_per_seq,
+    DoubleFreeError, PageAllocator, PrefixIndex, n_caching_attn_layers,
+    page_bytes, pages_per_seq,
 )
 
 
@@ -190,6 +191,235 @@ def test_freed_pages_not_attendable_by_new_owner():
     np.testing.assert_allclose(got, want, atol=1e-6)
 
 
+# ------------------------------------------------------ prefix sharing -----
+
+def _shared_prompts(cfg, sys_len, tails, seed=0):
+    rng = np.random.default_rng(seed)
+    sys_p = rng.integers(0, cfg.vocab_size, sys_len).astype(np.int32)
+    return [np.concatenate([sys_p, rng.integers(0, cfg.vocab_size, t)
+                            .astype(np.int32)]) for t in tails]
+
+
+@pytest.mark.parametrize("arch", ["tiny-dense", "tiny-swa", "tiny-gemma"])
+def test_prefix_sharing_engine_parity(arch):
+    """Shared-prefix batch served with prefix_sharing=True emits EXACTLY
+    the single-request generate() tokens across dense-GQA / sliding-window
+    / softcap stacks, and later admissions reuse the cached prefix (the
+    suffix-only prefill path)."""
+    cfg, params = _setup(arch)
+    prompts = _shared_prompts(cfg, 17, [4, 7, 3, 5], seed=2)
+    refs = [_ref(cfg, params, p, 5) for p in prompts]
+
+    eng = Engine(cfg, params, max_len=48, n_slots=2, paged=True, page_size=8,
+                 prefix_sharing=True)
+    rids = [eng.submit(p, 5) for p in prompts]
+    out = eng.run()
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(out[rid], refs[i], err_msg=f"req {i}")
+    s = eng.stats()
+    assert s["n_prefix_hits"] >= 3         # every follower hit the index
+    assert s["n_shared_prompt_tokens"] >= 3 * 16
+    assert s["n_prefill_tokens"] < sum(len(p) for p in prompts)
+    eng.allocator.check_invariants()
+
+
+@pytest.mark.parametrize("m", [1, 2])
+def test_prefix_sharing_parity_nbl_compressed(m):
+    """Prefix sharing over NBL-compressed stacks: linearized layers carry
+    no pool (nothing to share there) and token parity stays exact — the
+    m/K page-bill reduction applies to the shared pool too."""
+    cfg, _ = _setup()
+    ncfg = compress_config(cfg, cfg.attn_layer_indices()[-m:], "nbl")
+    params = init_params(jax.random.PRNGKey(1), ncfg)
+    prompts = _shared_prompts(ncfg, 18, [3, 6, 4], seed=4)
+    refs = [_ref(ncfg, params, p, 4) for p in prompts]
+
+    eng = Engine(ncfg, params, max_len=40, n_slots=2, paged=True,
+                 page_size=8, prefix_sharing=True)
+    rids = [eng.submit(p, 4) for p in prompts]
+    out = eng.run()
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(out[rid], refs[i])
+    assert eng.stats()["n_prefix_hits"] >= 2
+
+
+def test_ring_vs_paged_sharing_same_tokens():
+    """The ring engine and the paged engine WITH sharing emit identical
+    per-request tokens on an identical shared-prefix stream."""
+    cfg, params = _setup()
+    prompts = _shared_prompts(cfg, 17, [4, 9, 2, 6, 5], seed=7)
+    outs = {}
+    for mode in ("ring", "shared"):
+        kw = {} if mode == "ring" else dict(paged=True, page_size=8,
+                                            prefix_sharing=True)
+        eng = Engine(cfg, params, max_len=40, n_slots=2, **kw)
+        rids = [eng.submit(p, 4) for p in prompts]
+        got = eng.run()
+        outs[mode] = [got[r] for r in rids]
+    for a, b in zip(outs["ring"], outs["shared"]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_retiring_owner_keeps_shared_pages_alive():
+    """A slot retiring while its prefix pages are still referenced (by the
+    index, and transitively by a follower slot) must NOT free them: the
+    refcount holds, the follower's decode stays exact, and the pages leave
+    the pool only after every reference is dropped."""
+    cfg, params = _setup()
+    prompts = _shared_prompts(cfg, 17, [2, 6], seed=9)
+    refs = [_ref(cfg, params, p, n) for p, n in zip(prompts, (2, 8))]
+
+    # one slot: the publisher retires (short generation) while the index
+    # still references its prefix pages; the follower then shares them.
+    eng = Engine(cfg, params, max_len=40, n_slots=1, paged=True, page_size=8,
+                 prefix_sharing=True)
+    rid_a = eng.submit(prompts[0], 2)
+    rid_b = eng.submit(prompts[1], 8)
+    out = eng.run()
+    np.testing.assert_array_equal(out[rid_a], refs[0])
+    np.testing.assert_array_equal(out[rid_b], refs[1])
+    s = eng.stats()
+    assert s["n_prefix_hits"] == 1          # B reused A's published prefix
+    # retirement dropped only the slots' references; the index still pins
+    # its entries — nothing was freed that something still referenced.
+    assert eng.allocator.in_use == eng.prefix_index.n_entries > 0
+    eng.allocator.check_invariants()
+
+
+def test_index_eviction_then_realloc_no_leakage():
+    """Pages released at refcount 0 (after LRU index eviction under pool
+    pressure) and REALLOCATED to a different prompt show no token-level
+    leakage: the new tenant's output equals a fresh engine's."""
+    cfg, params = _setup()
+    a = _shared_prompts(cfg, 16, [3], seed=11)[0]
+    b = _shared_prompts(cfg, 16, [4], seed=99)[0]   # disjoint prompt
+    ref_b = _ref(cfg, params, b, 6)
+
+    # pool too small to keep A's prefix cached while B runs: admitting B
+    # must evict A's unreferenced index entries and reuse those pages.
+    eng = Engine(cfg, params, max_len=32, n_slots=1, paged=True, page_size=8,
+                 prefix_sharing=True)
+    from repro.models.paging import PageAllocator as PA
+    eng.allocator = PA(4)                   # = pages_per_seq(32, 8): 1 req
+    eng.n_pages = 4
+    rid_a = eng.submit(a, 4)
+    rid_b = eng.submit(b, 6)
+    out = eng.run(max_steps=200)
+    assert len(out[rid_a]) == 4
+    np.testing.assert_array_equal(out[rid_b], ref_b)
+    assert eng.prefix_index.n_entries <= 2  # A's entries were evicted
+    eng.allocator.check_invariants()
+
+
+def test_prefix_index_lookup_insert_evict():
+    """Index unit semantics: longest page-aligned PROPER prefix, last
+    (partial or final) page never indexed/shared, leaf-first LRU eviction
+    restricted to refcount-1 pages."""
+    idx = PrefixIndex(4)
+    alloc = PageAllocator(8)
+    prompt = np.arange(10)                  # pages: [0..4) [4..8) | partial
+    ids = alloc.alloc(3)
+    assert idx.insert(prompt, ids, alloc) == 2     # 10 // 4 full pages
+    assert alloc.refcount(ids[0]) == 2 and alloc.refcount(ids[2]) == 1
+    # full re-insert of the same prefix adds nothing
+    assert idx.insert(prompt, ids, alloc) == 0
+
+    k, hit = idx.lookup(prompt)
+    assert (k, hit) == (2, ids[:2])
+    k, hit = idx.lookup(np.arange(8))       # aligned: cap at (8-1)//4 = 1
+    assert (k, hit) == (1, ids[:1])
+    k, hit = idx.lookup(np.arange(100, 110))
+    assert (k, hit) == (0, [])
+
+    alloc.unref(ids)                        # publisher retires
+    assert alloc.in_use == 2                # index still pins 2 pages
+    # blocked subtree (the SWA window-release shape): an rc-1 parent above
+    # a still-referenced child frees nothing — the exact count knows it
+    alloc.ref(ids[1:2])                     # child pinned by a "slot"
+    assert idx.evictable_pages(alloc) == 0
+    assert idx.evict_lru(alloc, 2) == 0
+    alloc.unref(ids[1:2])
+    assert idx.evictable_pages(alloc) == 2
+    # deeper node is younger; eviction is LRU leaf-first: depth-2 first
+    assert idx.evict_lru(alloc) == 1 and idx.n_entries == 1
+    k, _ = idx.lookup(prompt)
+    assert k == 1                           # shallow entry still serves
+    assert idx.evict_lru(alloc) == 1 and idx.evict_lru(alloc) == 0
+    assert alloc.in_use == 0
+    alloc.check_invariants()
+
+
+def test_prefix_sharing_gates_stateful_stacks():
+    """Sharing keys the index on prompt TOKENS only, so any stack whose
+    prefix KV is not a pure function of those tokens is refused: SSM
+    (scanned state cannot resume) and cross-attention (KV downstream of a
+    cross_attn block is conditioned on per-request enc embeddings)."""
+    for arch in ("tiny-mamba", "tiny-zamba", "tiny-vlm"):
+        cfg, params = _setup(arch)
+        with pytest.raises(ValueError):
+            Engine(cfg, params, max_len=16, n_slots=1, paged=True,
+                   page_size=8, prefix_sharing=True)
+
+
+def test_unadmittable_request_does_not_wipe_index():
+    """A queued request that eviction provably cannot satisfy must defer
+    WITHOUT evicting anything: wiping every warm prefix to still fail
+    would convert other requests' future hits into full prefills."""
+    cfg, params = _setup()
+    a = _shared_prompts(cfg, 17, [0], seed=3)[0][:17]    # 2 full pages
+    eng = Engine(cfg, params, max_len=40, n_slots=2, paged=True, page_size=8,
+                 prefix_sharing=True)
+    from repro.models.paging import PageAllocator as PA
+    eng.allocator = PA(4)
+    eng.n_pages = 4
+    rid_a = eng.submit(a, 2)
+    eng.run()
+    assert len(eng.run()[rid_a]) == 2
+    assert eng.prefix_index.n_entries == 2      # warm cache, rc 1 each
+    big = _prompts(cfg, [33], seed=8)[0]        # 5 pages > 2 free + 2 evict
+    eng.submit(big, 1)
+    for _ in range(3):
+        eng.step()
+    assert len(eng.scheduler) == 1              # still deferred...
+    assert eng.prefix_index.n_entries == 2      # ...and the cache survived
+    eng.allocator.check_invariants()
+
+
+def test_prefix_index_evicts_deep_chains():
+    """Regression: eviction walks the trie iteratively — a prefix deeper
+    than the interpreter recursion limit (thousands of full pages) must
+    evict cleanly, leaf-first, without RecursionError."""
+    import sys
+    depth = sys.getrecursionlimit() + 200
+    idx = PrefixIndex(1)                    # 1 token per page: deep chain
+    alloc = PageAllocator(depth)
+    ids = alloc.alloc(depth)
+    idx.insert(np.arange(depth) % 7, ids, alloc)
+    assert idx.n_entries == depth
+    alloc.unref(ids)                        # publisher gone: all rc 1
+    for _ in range(3):
+        assert idx.evict_lru(alloc) == 1
+    assert idx.n_entries == depth - 3
+    alloc.check_invariants()
+
+
+def test_nbl_page_budget_bills_shared_prefix_once():
+    """Shared-prefix billing: the common prompt pages count once against
+    the pool, not once per request — admitted concurrency rises, and stays
+    monotone in NBL-m."""
+    cfg, _ = _setup()
+    budget = 12 * n_caching_attn_layers(cfg) * page_bytes(cfg, 8)
+    plain = nbl_page_budget(cfg, budget, page_size=8, expected_len=48)
+    shared = nbl_page_budget(cfg, budget, page_size=8, expected_len=48,
+                             shared_prefix_len=32)
+    assert plain == 2                       # 12 pages / 6 per request
+    assert shared == 4                      # (12-4) / (6-4)
+    seq = [nbl_page_budget(nbl_variant(cfg, m), budget, page_size=8,
+                           expected_len=48, shared_prefix_len=32)
+           for m in range(4)]
+    assert seq == sorted(seq)
+
+
 # ----------------------------------------------------- allocator -----------
 
 def test_allocator_basic():
@@ -207,25 +437,88 @@ def test_allocator_basic():
     a.check_invariants()
 
 
+def test_allocator_refcounts():
+    """ref pins a page across its allocator's release; unref at refcount 0
+    — and only then — returns it to the free list."""
+    a = PageAllocator(4)
+    ids = a.alloc(2)
+    a.ref(ids)                                 # rc 2 each
+    a.unref(ids)
+    assert a.in_use == 2 and a.free_pages == 2   # still pinned at rc 1
+    a.unref(ids[:1])
+    assert a.in_use == 1 and a.free_pages == 3
+    with pytest.raises(DoubleFreeError):
+        a.ref([ids[0]])                        # ref of a free page
+    a.unref(ids[1:])
+    a.check_invariants()
+    assert a.in_use == 0
+
+
+def test_allocator_free_is_atomic():
+    """free/unref validates the WHOLE id list before mutating: a call that
+    raises must leave every page exactly as it found it — including
+    duplicate ids within one call, which count once per occurrence."""
+    a = PageAllocator(6)
+    ids = a.alloc(3)
+    bad = [ids[0], 99]                         # good id first, then foreign
+    with pytest.raises(DoubleFreeError):
+        a.free(bad)
+    assert a.refcount(ids[0]) == 1             # good id NOT freed
+    assert a.in_use == 3 and a.free_pages == 3
+    a.check_invariants()
+
+    with pytest.raises(DoubleFreeError):       # dup ids exceed refcount 1
+        a.free([ids[1], ids[1]])
+    assert a.refcount(ids[1]) == 1
+    a.check_invariants()
+
+    a.ref([ids[2]])                            # rc 2: dup release is legal
+    a.free([ids[2], ids[2]])
+    assert a.refcount(ids[2]) == 0 and a.free_pages == 4
+    with pytest.raises(DoubleFreeError):       # second free after rc hit 0
+        a.free([ids[2], ids[0], ids[1]])
+    assert a.in_use == 2                       # ids[0], ids[1] untouched
+    a.check_invariants()
+
+
 @settings(max_examples=50, deadline=None)
-@given(st.lists(st.tuples(st.booleans(), st.integers(0, 5)), max_size=40))
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 5)), max_size=40))
 def test_allocator_invariants_property(ops):
-    """Hypothesis property: under any alloc/free interleaving, no page is
-    ever double-allocated and the free list + allocations always partition
-    the pool (free-list conservation)."""
+    """Hypothesis property: under any alloc/ref/unref interleaving — with
+    occasional invalid calls (double-unref, duplicate ids beyond the
+    refcount) interleaved — no page is ever double-allocated, rejected
+    calls mutate NOTHING (atomicity), and the free list + live refcounts
+    always partition the pool (free-list conservation)."""
     a = PageAllocator(8)
-    held: list[list[int]] = []
-    for is_alloc, n in ops:
-        if is_alloc:
+    held: list[list[int]] = []                 # one entry per reference
+    for op, n in ops:
+        if op == 0:
             got = a.alloc(n)
             if got is not None:
                 flat = [p for grp in held for p in grp]
                 assert not (set(got) & set(flat)), "double allocation"
                 held.append(got)
-        elif held:
-            a.free(held.pop(n % len(held)))
+        elif op == 1 and held:                 # extra reference
+            grp = held[n % len(held)]
+            a.ref(grp)
+            held.append(list(grp))
+        elif op == 2 and held:                 # drop one reference
+            a.unref(held.pop(n % len(held)))
+        elif op == 3:                          # invalid: over-release
+            grp = held[n % len(held)] if held else [n]
+            counts = {p: a.refcount(p) for p in grp}
+            with pytest.raises(DoubleFreeError):
+                a.unref([p for p in grp
+                         for _ in range(a.refcount(p) + 1)])
+            for p, c in counts.items():        # atomic: nothing changed
+                assert a.refcount(p) == c
         a.check_invariants()
-    assert a.in_use == sum(len(g) for g in held)
+    refs = {}
+    for grp in held:
+        for p in grp:
+            refs[p] = refs.get(p, 0) + 1
+    assert a.in_use == len(refs)
+    assert all(a.refcount(p) == c for p, c in refs.items())
 
 
 # ------------------------------------------------- page budget / NBL -------
@@ -280,6 +573,16 @@ def test_pool_exhaustion_preempts_youngest_and_completes():
         np.testing.assert_array_equal(out[rid], want)
     eng.allocator.check_invariants()
     assert eng.allocator.in_use == 0
+    # preemption metrics split: restarted requests are counted and their
+    # (rewound) TTFT surfaces separately, so restart latency can never
+    # silently pollute a paged-vs-ring TTFT comparison.
+    s = latency_stats([eng.finished[r] for r in rids])
+    n_pre = sum(1 for r in (eng.finished[rid] for rid in rids)
+                if r.n_preemptions > 0)
+    assert s["n_preempted_requests"] == n_pre >= 1
+    assert "p99_ttft_preempted_s" in s
+    assert n_pre + sum(1 for rid in rids
+                       if eng.finished[rid].n_preemptions == 0) == s["n"]
 
 
 def test_sliding_window_releases_dead_pages_with_parity():
