@@ -24,6 +24,13 @@
                       p50 TTFT strictly lower), shared pages billed once
                       (admitted concurrency up, monotone in NBL-m), exact
                       token parity vs generate()
+  chunked_throughput  chunked prefill (page-aligned prefill-decode
+                      interleaving) vs non-chunked paged at EQUAL HBM
+                      budget while a long prompt is admitted next to
+                      active decodes: p99 inter-token latency of the
+                      in-flight decodes strictly below non-chunked, long-
+                      prompt TTFT within 1.2x, exact token parity, decodes
+                      provably emitting BETWEEN chunks
   kernels             µs/call of the three Pallas kernels (interpret mode —
                       CPU-emulated, structural check only)
 
@@ -391,6 +398,109 @@ def bench_prefix(fast: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+def bench_chunked(fast: bool) -> None:
+    """Chunked prefill vs non-chunked paged at EQUAL HBM budget (the
+    prefill-decode interleaving claim): two short requests are mid-decode
+    when a long prompt arrives. Non-chunked, the admission step runs the
+    whole prompt's prefill serially — every active decode stalls for it,
+    and that stall IS the decodes' inter-token latency spike. Chunked, at
+    most one page-aligned chunk runs per step, so decodes keep emitting
+    between chunks: p99 inter-token latency during the admission window
+    must be STRICTLY below non-chunked, the long prompt's TTFT within
+    1.2x, and every request's tokens exactly equal generate()'s."""
+    from repro.configs import get_config
+    from repro.launch.engine import Engine
+    from repro.launch.serve import generate
+    from repro.models import init_params
+    from repro.models.kv_cache import cache_bytes
+
+    cfg = get_config("tiny-dense")
+    max_len, page_size = 1024, 64
+    # the long prompt must be big enough that prefill COMPUTE (not
+    # per-step dispatch overhead) dominates, or the TTFT comparison
+    # measures the host loop: at 768 tokens the 3 chunks skip the full
+    # prefill's masked upper triangle and chunked TTFT lands ~0.5-0.6x
+    # non-chunked; --fast only trims the timed repetitions
+    long_len, chunk = 768, 256
+    short_len, short_new, long_new = 16, 40, 8
+    budget = 3 * cache_bytes(cfg, 1, max_len)      # 3 full reservations
+    rng = np.random.default_rng(0)
+    shorts = [rng.integers(0, cfg.vocab_size, short_len).astype(np.int32)
+              for _ in range(2)]
+    longp = rng.integers(0, cfg.vocab_size, long_len).astype(np.int32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    refs = [np.asarray(generate(cfg, params, jnp.asarray(p)[None],
+                                max_new=n))[0]
+            for p, n in [(shorts[0], short_new), (shorts[1], short_new),
+                         (longp, long_new)]]
+
+    def run_once(chunked: bool):
+        kw = dict(paged=True, page_size=page_size, expected_len=max_len)
+        if chunked:
+            kw.update(chunked_prefill=True, prefill_chunk_tokens=chunk)
+        eng = Engine(cfg, params, max_len=max_len,
+                     cache_budget_bytes=budget, **kw)
+        sids = [eng.submit(p, short_new) for p in shorts]
+        for _ in range(3):                         # shorts mid-decode
+            eng.step()
+        lid = eng.submit(longp, long_new)
+        gaps = []
+        long_first = None
+        while eng.has_work:
+            t0 = time.perf_counter()
+            eng.step()
+            dt = time.perf_counter() - t0
+            req = eng.finished.get(lid) or next(
+                (r for r in eng.slot_req
+                 if r is not None and r.rid == lid), None)
+            if long_first is None:
+                # the admission window: every step until the long prompt's
+                # first token is a decode gap the short requests ate
+                gaps.append(dt)
+                if req is not None and req.t_first:
+                    long_first = req.t_first - req.t_submit
+        outs = {rid: np.asarray(eng.finished[rid].tokens, np.int32)
+                for rid in sids + [lid]}
+        for got, want in zip([outs[sids[0]], outs[sids[1]], outs[lid]],
+                             refs):                # exact parity, each mode
+            np.testing.assert_array_equal(got, want)
+        interleaved = eng.n_interleaved_decode_steps
+        return eng, gaps, long_first, interleaved
+
+    rows = {}
+    for mode, chunked in (("paged", False), ("chunked", True)):
+        run_once(chunked)                          # warmup: compile jits
+        # best-of-N timed passes, with p99-ITL and TTFT minimized
+        # INDEPENDENTLY: both are sums/maxima over steps, so a single
+        # descheduling blip on a loaded CI box inflates them one-sidedly
+        # — per-claim minima estimate the latency structure under test,
+        # not the box's background load
+        p99s, ttfts, inters = [], [], []
+        for _ in range(4):
+            eng, gaps, ttft, interleaved = run_once(chunked)
+            p99s.append(float(np.percentile(gaps, 99)))
+            ttfts.append(ttft)
+            inters.append(interleaved)
+        p99, ttft, interleaved = min(p99s), min(ttfts), max(inters)
+        rows[mode] = (p99, ttft, interleaved)
+        emit(f"chunked/{mode}/concurrency", eng.n_slots, "equal_budget")
+        emit(f"chunked/{mode}/p99_itl_ms", round(p99 * 1e3, 2),
+             "long_admission_window")
+        emit(f"chunked/{mode}/long_ttft_ms", round(ttft * 1e3, 2))
+        if chunked:
+            emit("chunked/n_chunks", eng.n_chunks, "deterministic")
+            emit("chunked/interleaved_steps", interleaved, "deterministic")
+    # structural + latency claims (parity already asserted per mode):
+    # chunking strictly caps the decode stall, within 1.2x TTFT, and the
+    # decodes demonstrably emitted between chunks
+    assert rows["chunked"][0] < rows["paged"][0], rows
+    assert rows["chunked"][1] <= 1.2 * rows["paged"][1], rows
+    assert rows["chunked"][2] >= 1, rows
+    emit("chunked/p99_itl_ratio",
+         round(rows["paged"][0] / rows["chunked"][0], 2), "assert_gt_1")
+
+
+# ---------------------------------------------------------------------------
 def bench_kernels(fast: bool) -> None:
     from repro.kernels import ops
 
@@ -504,6 +614,7 @@ BENCHES = {
     "serving_throughput": bench_serving,
     "paged_throughput": bench_paged,
     "prefix_throughput": bench_prefix,
+    "chunked_throughput": bench_chunked,
     "spec_decode": bench_speculative,
     "quant_compose": bench_quant_compose,
     "lora": bench_lora,

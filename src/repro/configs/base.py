@@ -245,6 +245,12 @@ SHAPES: dict[str, ShapeConfig] = {
     # 32k-token prompt prefix resident in the paged pools
     "prefill_shared_32k": ShapeConfig("prefill_shared_32k",
                                       "prefill_shared", 32_768, 32),
+    # chunked prefill: one 4k page-aligned chunk per request resuming
+    # behind 28k already-prefilled tokens of its OWN prompt (the engine's
+    # chunked_prefill jit — same partial-prefill signature as
+    # prefill_shared; only the prefix table's provenance differs)
+    "prefill_chunked_4k": ShapeConfig("prefill_chunked_4k",
+                                      "prefill_chunked", 4_096, 32),
     "long_500k":   ShapeConfig("long_500k",   "decode",  524_288, 1),
 }
 
@@ -255,16 +261,18 @@ def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
     if shape.name == "long_500k" and not cfg.sub_quadratic:
         return False, ("full-attention arch: 524k dense KV cache/attention is "
                        "the quadratic regime this shape excludes (DESIGN.md)")
-    if shape.kind == "prefill_shared":
+    if shape.kind in ("prefill_shared", "prefill_chunked"):
         if any(b.kind == "mamba" for b in cfg.blocks()):
             return False, ("SSM stack: partial prefill cannot resume scanned "
                            "state mid-sequence (models/transformer.prefill)")
         if any(b.kind == "cross_attn" for b in cfg.blocks()):
-            return False, ("cross-attention stack: prefix KV is conditioned "
-                           "on per-request enc embeddings, not shareable by "
-                           "prompt tokens (launch/engine.py)")
+            return False, ("cross-attention stack: prefill needs per-request "
+                           "enc embeddings this shape does not carry (and "
+                           "prefix KV is not shareable by prompt tokens — "
+                           "launch/engine.py)")
         if not any(b.kind == "attn" for b in cfg.blocks()):
-            return False, "no caching attention layer: nothing to share"
+            return False, ("no caching attention layer: nothing to resume "
+                           "through the page table")
     return True, ""
 
 

@@ -81,9 +81,11 @@ def build_target(cfg, shape):
         ntok = shape.global_batch * shape.seq_len
         return prefill_step, args, shardings, ntok, False
 
-    if shape.kind == "prefill_shared":
-        # prefix-sharing partial prefill: suffix tokens at absolute
-        # positions past a pooled shared prefix (launch/engine.py _admit)
+    if shape.kind in ("prefill_shared", "prefill_chunked"):
+        # partial prefill: suffix/chunk tokens at absolute positions past
+        # pooled prefix pages — a shared prompt prefix (engine _admit) or
+        # the request's own earlier chunks (engine _chunk_step); the jit
+        # is identical, only the prefix table's provenance differs
         def shared_prefill_step(params, tokens, cache, ptbl, plen):
             return prefill(cfg, params, tokens, cache_len=shape.seq_len,
                            paged=True, prefix_cache=cache, prefix_tbl=ptbl,

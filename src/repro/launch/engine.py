@@ -39,14 +39,56 @@ Architecture (scheduler → engine → cache):
       prefixes survive their publisher. Requires a stack with no SSM
       blocks (partial prefill cannot resume scanned state).
 
+      CHUNKED PREFILL (``chunked_prefill=True``, paged only): a prompt is
+      split into page-aligned chunks of ``prefill_chunk_tokens`` and at
+      most ONE chunk is prefilled per ``step()``, interleaved with the
+      batched decode of everything in flight — a long prompt no longer
+      monopolizes a step, so active decodes keep emitting between chunks
+      instead of stalling for the whole prefill. Each chunk reuses the
+      partial-prefill path below: the request's OWN earlier chunks play
+      the role of the "shared prefix" (prefix_tbl points at the slot's
+      already-written pages), so no new model code path exists below the
+      page table. Chunk pages are allocated chunk-by-chunk; under pool
+      pressure a mid-prompt request SUSPENDS between chunks holding its
+      pages (resuming when the pool recovers) and is torn down only by
+      preemption. Composes with prefix sharing (lookup once at admission,
+      then chunk only the suffix); gated off for SSM stacks like the
+      other partial-prefill paths.
+
       ``step()`` interleaves: (1) admission — for every free slot (and, when
       paged, enough free pages), pop a request, prefill it at batch=1,
-      assign its cache (slot row / prompt pages), emit its first token;
-      (2) one *batched* decode over all slots with a per-slot position
-      vector — retired/empty rows ride along masked (kpos = -1, or an
-      unallocated page-table row); (3) retirement — EOS or max-token
+      assign its cache (slot row / prompt pages), emit its first token
+      (chunked: only record the slot as chunking — no prefill yet);
+      (1b) chunked only: prefill ONE page-aligned chunk of the oldest
+      chunking slot; the final chunk emits the first token and flips the
+      slot to decoding within the same step; (2) one *batched* decode over
+      all decoding slots with a per-slot position vector — retired/empty/
+      chunking rows ride along masked (kpos = -1, an unallocated
+      page-table row, or pos = -1); (3) retirement — EOS or max-token
       requests release their slot (and pages, copy-free: isolation under
       reuse is positional, see models/paging.py).
+
+      Slot state machine (per request)::
+
+          admitted ──(chunked)──> chunking(pos) ──last chunk──> decoding
+             │                        │   ▲                        │
+             └──(non-chunked: full ───┼───┘ suspend/resume          │
+                 prefill at admission)│     between steps           │
+                                      ▼                             ▼
+                             preempted: pages unref'd,      retired: EOS or
+                             requeued, restarts from        max_new; slot +
+                             its prompt                     pages recycled
+
+      Mode compatibility (engine layout x stack family)::
+
+          layout \\ stack      dense  SWA    SSM/hybrid  cross-attn (VLM)
+          ring (default)       yes    yes    yes         yes
+          paged                yes    yes    yes (slot   yes
+                                             state rows)
+          prefix_sharing       yes    yes    no (scan    no (enc-
+                                             resume)     conditioned KV)
+          chunked_prefill      yes    yes    no (scan    yes (enc rides
+                                             resume)     every chunk)
   Cache
       (L, n_slots, ...) slot rows, or (L, n_pages, KV, page_size, hd)
       pools + host page table (models/paging.py).
@@ -85,12 +127,26 @@ from repro.models.kv_cache import assign_slot, init_slot_cache
 from repro.models.paging import (
     DEFAULT_PAGE_SIZE, PageAllocator, PrefixIndex, assign_pages,
     build_page_table, init_paged_cache, n_caching_attn_layers,
-    pages_per_seq, pool_pages_for_budget,
+    pages_per_seq, pool_pages_for_budget, pow2_ceil, span_pages,
 )
 
 
-def _pow2_ceil(n: int) -> int:
-    return 1 << max(0, (int(n) - 1).bit_length())
+# Shared jit cache for UNSHARDED engines. Engine closures capture only the
+# (hashable, value-equal) ModelConfig plus static plan constants, so two
+# engines over equal configs lower to identical jaxprs — handing them the
+# SAME callable lets jax's trace cache reuse compilations across Engine
+# instances (tests/benchmarks/the fuzz harness construct engines by the
+# hundred; per-instance closures would recompile every one). Sharded
+# engines keep per-instance jits: their in/out shardings are captured from
+# the ambient mesh at construction and must not leak across meshes.
+_SHARED_JITS: dict = {}
+
+
+def _shared_jit(key, build):
+    fn = _SHARED_JITS.get(key)
+    if fn is None:
+        fn = _SHARED_JITS[key] = build()
+    return fn
 
 
 class Engine:
@@ -109,7 +165,12 @@ class Engine:
     prompt-prefix reuse through a PrefixIndex; ``shared_prefix_len`` is
     the billing hint for it — the prompt-prefix length (tokens) the
     workload shares, billed ONCE across the fleet instead of per request
-    (scheduler.nbl_page_budget).
+    (scheduler.nbl_page_budget). ``chunked_prefill=True`` (paged,
+    non-SSM) splits every prompt into page-aligned chunks of
+    ``prefill_chunk_tokens`` (rounded up to a page multiple; default one
+    page) and prefills at most one chunk per step, interleaved with the
+    batched decode — see the module docstring for the slot state machine
+    and the mode-compatibility table.
 
     Sharding is captured at CONSTRUCTION time: build the engine inside
     ``use_mesh(mesh)`` to get sharded params/caches — an engine built
@@ -128,12 +189,34 @@ class Engine:
                  expected_len: Optional[int] = None,
                  bucket_prompts: bool = True,
                  prefix_sharing: bool = False,
-                 shared_prefix_len: int = 0):
+                 shared_prefix_len: int = 0,
+                 chunked_prefill: bool = False,
+                 prefill_chunk_tokens: Optional[int] = None):
         self.paged = bool(paged)
         self.page_size = int(page_size)
         if self.paged and self.page_size & (self.page_size - 1):
             raise ValueError(f"page_size must be a power of two, "
                              f"got {page_size}")
+        self.chunked = bool(chunked_prefill)
+        if self.chunked:
+            if not self.paged:
+                raise ValueError("chunked_prefill requires paged=True "
+                                 "(chunks are page-aligned and resume "
+                                 "through the page table)")
+            if any(b.kind == "mamba" for b in cfg.blocks()):
+                raise ValueError("chunked_prefill cannot serve SSM stacks "
+                                 "(the partial prefill cannot resume "
+                                 "scanned state mid-prompt)")
+            ct = self.page_size if prefill_chunk_tokens is None \
+                else int(prefill_chunk_tokens)
+            if ct < 1:
+                raise ValueError(f"prefill_chunk_tokens must be >= 1, "
+                                 f"got {prefill_chunk_tokens}")
+            # chunks must END on page boundaries so the next chunk's prefix
+            # table covers whole pages: round UP to a page multiple
+            self.chunk_tokens = -(-ct // self.page_size) * self.page_size
+        else:
+            self.chunk_tokens = 0
         self.prefix_sharing = bool(prefix_sharing)
         if self.prefix_sharing:
             if not self.paged:
@@ -220,12 +303,23 @@ class Engine:
         self.slot_req: list[Optional[Request]] = [None] * self.n_slots
         self.slot_pos = np.zeros(self.n_slots, np.int32)   # pos of last tok
         self.slot_tok = np.zeros(self.n_slots, np.int32)   # last emitted tok
+        # chunked-prefill progress: -1 = not chunking (free or decoding);
+        # >= 0 = prompt tokens already cached (always a page multiple
+        # mid-prompt — only the FINAL chunk may end off a page boundary,
+        # and it transitions the slot to decoding)
+        self.slot_chunk_pos = np.full(self.n_slots, -1, np.int32)
         self.finished: dict[int, Request] = {}
         self.n_decode_steps = 0
         self.n_prefills = 0
+        self.n_chunks = 0              # chunked-prefill chunks processed
+        # steps whose batched decode emitted tokens WHILE a prompt was
+        # still mid-chunking — the interleaving claim, counted natively so
+        # smokes/benchmarks need not re-derive it from slot state
+        self.n_interleaved_decode_steps = 0
         self.n_prefill_tokens = 0      # valid (unpadded) tokens prefilled
         self.n_preemptions = 0
         self.n_rejected = 0            # admission-time length-guard drops
+        self._admit_seq = 0            # monotone admission counter (age)
         self.n_prefix_hits = 0         # admissions served a cached prefix
         self.n_shared_prompt_tokens = 0  # prompt tokens skipped via sharing
         self._pool_in_use_sum = 0      # allocator occupancy, per decode step
@@ -261,8 +355,11 @@ class Engine:
                 _assign, in_shardings=jit_shardings((cspecs, None, None)),
                 out_shardings=jit_shardings(cspecs), **akw)
         else:
-            self._decode_jit = jax.jit(_decode, **dkw)
-            self._assign_jit = jax.jit(_assign, **akw)
+            self._decode_jit = _shared_jit(
+                ("decode", cfg, self.paged, donate),
+                lambda: jax.jit(_decode, **dkw))
+            self._assign_jit = _shared_jit(
+                ("assign_slot", donate), lambda: jax.jit(_assign, **akw))
         self._akw, self._cspecs = akw, cspecs
         # under a mesh the batch=1 prefill cache must come out in the same
         # production layout the slot cache uses, so assignment never
@@ -299,7 +396,7 @@ class Engine:
         it, tokens stay exact (mamba-safe) and only the paged CACHE length
         rounds up to a page multiple (pages tile the cache)."""
         if self.bucket_prompts:
-            b = _pow2_ceil(prompt_len)
+            b = pow2_ceil(prompt_len)
             if self.paged:
                 b = min(max(b, self.page_size), self._pps * self.page_size)
             else:
@@ -339,7 +436,6 @@ class Engine:
                                    cache_len=cache_len, paged=paged,
                                    valid_len=valid_len if masked else None)
 
-            kw = {}
             if self._sharded:
                 from repro.launch.specs import cache_shapes
                 # prefill returns the POSITION-ALIGNED batch=1 layout even
@@ -351,7 +447,10 @@ class Engine:
                 ins += (None,) if with_enc else ()
                 kw = dict(in_shardings=jit_shardings(ins),
                           out_shardings=jit_shardings((None, pcspecs)))
-            fn = jax.jit(_prefill, **kw)
+                fn = jax.jit(_prefill, **kw)
+            else:
+                fn = _shared_jit(("prefill", cfg, paged) + key,
+                                 lambda: jax.jit(_prefill))
             self._prefill_jits[key] = fn
         return fn
 
@@ -371,7 +470,10 @@ class Engine:
                 kw.update(in_shardings=jit_shardings(
                     (self._cspecs, pcspecs, None, None)),
                     out_shardings=jit_shardings(self._cspecs))
-            fn = jax.jit(_assign, **kw)
+                fn = jax.jit(_assign, **kw)
+            else:
+                fn = _shared_jit(("assign_paged", cfg, ps, bool(kw)),
+                                 lambda: jax.jit(_assign, **kw))
             self._assign_paged_jits[cache_len] = fn
         return fn
 
@@ -420,6 +522,7 @@ class Engine:
         assert req is not None
         self._release_pages(slot)
         self.slot_req[slot] = None
+        self.slot_chunk_pos[slot] = -1      # mid-prompt progress discarded
         req.tokens = []
         req.t_first = 0.0
         req.t_admit = 0.0
@@ -449,7 +552,7 @@ class Engine:
 
     def _youngest_active(self) -> int:
         return max(self.active_slots,
-                   key=lambda s: self.slot_req[s].t_admit)
+                   key=lambda s: self.slot_req[s].admit_seq)
 
     def _release_window_pages(self, slot: int, pos: int) -> None:
         """Free this slot's pages that sit entirely below the attention
@@ -478,6 +581,8 @@ class Engine:
         for slot in range(self.n_slots):
             if self.slot_req[slot] is None:
                 continue
+            if self.slot_chunk_pos[slot] >= 0:
+                continue   # mid-prompt: the chunk path owns these pages
             if self._page_window is not None:
                 self._release_window_pages(slot, int(self.slot_pos[slot]))
             lp = int(self.slot_pos[slot]) // self.page_size
@@ -519,59 +624,99 @@ class Engine:
                shared_ids=()) -> None:
         now = time.monotonic()
         req.t_admit = now
+        self._admit_seq += 1
+        req.admit_seq = self._admit_seq
         plen = len(req.prompt)
         ps = self.page_size
         start = n_shared * ps                    # first suffix position
         if n_shared:
             self.page_tbl[slot, :n_shared] = shared_ids
             self.slot_pages[slot] = list(shared_ids)   # pin -> slot ref
-        suffix = req.prompt[start:] if n_shared else req.prompt
-        token_len, cache_len, masked = self._prefill_plan(len(suffix))
-        tokens = np.zeros(token_len, np.int32)
-        tokens[:len(suffix)] = suffix
-        pb = _pow2_ceil(n_shared) if n_shared else 0
-        fn = self._prefill_fn(token_len, cache_len, masked,
-                              req.enc is not None, prefix_pages=pb)
-        args = (self.params, jnp.asarray(tokens)[None],
-                jnp.int32(len(suffix)))
-        if n_shared:
-            ptbl = np.full(pb, -1, np.int32)
-            ptbl[:n_shared] = shared_ids
-            args += (self.cache, jnp.asarray(ptbl), jnp.int32(start))
-        args += (jnp.asarray(req.enc)[None],) if req.enc is not None else ()
-        logits, pcache = fn(*args)
-        self.n_prefills += 1
-        self.n_prefill_tokens += len(suffix)
         if n_shared:
             self.n_prefix_hits += 1
             self.n_shared_prompt_tokens += start
+        if self.chunked:
+            # admitted -> chunking(start): no prefill here — _chunk_step
+            # prefills one page-aligned chunk per step, starting past any
+            # shared prefix (sharing composes: lookup once, chunk the
+            # suffix only).
+            self.slot_req[slot] = req
+            self.slot_chunk_pos[slot] = start
+            return
         if self.paged:
             npg = pages_per_seq(plen, ps)
             ids = self.allocator.alloc(npg - n_shared)
             assert ids is not None, "admission checked page availability"
             self.page_tbl[slot, n_shared:npg] = ids
             self.slot_pages[slot].extend(ids)    # [] or the shared prefix
-            afn = self._assign_paged_fn(cache_len)
-            # suffix tiles map to logical pages [n_shared, ...): hand the
-            # assign jit the table row from the first divergent page,
-            # right-padded back to the (static) full row width
-            row = np.full(self._pps, -1, np.int32)
-            row[:self._pps - n_shared] = self.page_tbl[slot, n_shared:]
-            self.cache = afn(self.cache, pcache, jnp.int32(slot),
-                             jnp.asarray(row))
-            if self.prefix_sharing and plen // ps:
-                # publish every FULL prompt page (shared ones are already
-                # indexed; new nodes take the index's own reference)
-                self.prefix_index.insert(req.prompt,
-                                         self.page_tbl[slot, :plen // ps],
-                                         self.allocator)
-        else:
+            logits = self._run_partial_prefill(slot, req, start, plen)
+        else:                                    # ring: n_shared is 0
+            token_len, cache_len, masked = self._prefill_plan(plen)
+            tokens = np.zeros(token_len, np.int32)
+            tokens[:plen] = req.prompt
+            fn = self._prefill_fn(token_len, cache_len, masked,
+                                  req.enc is not None)
+            args = (self.params, jnp.asarray(tokens)[None],
+                    jnp.int32(plen))
+            args += (jnp.asarray(req.enc)[None],) \
+                if req.enc is not None else ()
+            logits, pcache = fn(*args)
+            self.n_prefills += 1
+            self.n_prefill_tokens += plen
             self.cache = self._assign_jit(self.cache, pcache,
                                           jnp.int32(slot))
         self.slot_req[slot] = req
         self.slot_pos[slot] = plen               # position of its 1st token
         tok = self._sample(np.asarray(logits[0, -1], np.float32))
         self._emit(req, slot, tok, time.monotonic())
+
+    def _run_partial_prefill(self, slot: int, req: Request,
+                             start: int, end: int):
+        """Prefill prompt[start:end) of ``slot``'s request into the PAGED
+        cache (``start`` page-aligned; the span's table entries already
+        allocated): pad/bucket the span, hand pages [0, start/ps) from the
+        slot's own table row to the partial-prefill jit as the prefix,
+        page-assign the returned cache, and publish full pages to the
+        prefix index. BOTH partial-prefill callers run through here — the
+        shared-prefix suffix at admission (_admit) and the chunked
+        engine's per-step chunk (_chunk_step) — so their call conventions
+        cannot drift apart. Returns the span's last-token logits."""
+        ps = self.page_size
+        span = req.prompt[start:end]
+        token_len, cache_len, masked = self._prefill_plan(len(span))
+        tokens = np.zeros(token_len, np.int32)
+        tokens[:len(span)] = span
+        start_pg = start // ps
+        pb = pow2_ceil(start_pg) if start_pg else 0
+        fn = self._prefill_fn(token_len, cache_len, masked,
+                              req.enc is not None, prefix_pages=pb)
+        args = (self.params, jnp.asarray(tokens)[None],
+                jnp.int32(len(span)))
+        if pb:
+            ptbl = np.full(pb, -1, np.int32)
+            ptbl[:start_pg] = self.page_tbl[slot, :start_pg]
+            args += (self.cache, jnp.asarray(ptbl), jnp.int32(start))
+        args += (jnp.asarray(req.enc)[None],) if req.enc is not None else ()
+        logits, pcache = fn(*args)
+        self.n_prefills += 1
+        self.n_prefill_tokens += len(span)
+        afn = self._assign_paged_fn(cache_len)
+        # span tiles map to logical pages [start_pg, ...): hand the assign
+        # jit the table row from there, right-padded back to the (static)
+        # full row width
+        row = np.full(self._pps, -1, np.int32)
+        row[:self._pps - start_pg] = self.page_tbl[slot, start_pg:]
+        self.cache = afn(self.cache, pcache, jnp.int32(slot),
+                         jnp.asarray(row))
+        if self.prefix_sharing and end // ps:
+            # publish every FULL page written so far — PROGRESSIVELY for
+            # chunks, so later admissions can share a long prompt's head
+            # while its tail still chunks (earlier/shared pages are
+            # already indexed; new nodes take the index's own reference)
+            self.prefix_index.insert(req.prompt[:end],
+                                     self.page_tbl[slot, :end // ps],
+                                     self.allocator)
+        return logits
 
     def _can_admit(self, req: Request, n_shared: int = 0) -> bool:
         """Paged admission gate, in REFERENCED pages (shared prefix pages
@@ -585,10 +730,77 @@ class Engine:
         if not self.paged:
             return True
         plen = len(req.prompt)
+        if self.chunked:
+            # chunk-granular admission: only the FIRST chunk's new pages
+            # must be free (later chunks allocate as they run, suspending
+            # under pressure), plus the usual fault reserve per in-flight
+            # request — chunked admission paces by actual page demand, not
+            # the whole prompt.
+            first_end = min(n_shared * self.page_size + self.chunk_tokens,
+                            plen)
+            need = (pages_per_seq(first_end, self.page_size) - n_shared
+                    + len(self.active_slots))
+            return (self.allocator.free_pages >= need
+                    or self._reclaim_pages(need))
         npg = pages_per_seq(plen, self.page_size)
         own_fault = 1 if plen % self.page_size == 0 else 0
         need = (npg - n_shared) + own_fault + len(self.active_slots)
         return self.allocator.free_pages >= need or self._reclaim_pages(need)
+
+    def _chunk_step(self) -> int:
+        """Prefill ONE page-aligned chunk of the oldest chunking slot's
+        prompt (FIFO over admission time), allocating only that chunk's
+        pages. Non-final chunks leave the slot SUSPENDED until the next
+        step — its pages are retained, its table row's tail stays
+        unallocated so the batched decode masks it. The final chunk's
+        logits seed decoding: the slot flips chunking -> decoding, its
+        first token is emitted and it joins this same step's decode.
+        Returns #tokens emitted (0 or 1)."""
+        chunking = [s for s in self.active_slots
+                    if self.slot_chunk_pos[s] >= 0]
+        if not chunking:
+            return 0
+        slot = min(chunking, key=lambda s: self.slot_req[s].admit_seq)
+        req = self.slot_req[slot]
+        ps = self.page_size
+        filled = int(self.slot_chunk_pos[slot])
+        plen = len(req.prompt)
+        end = min(filled + self.chunk_tokens, plen)
+        start_pg, end_pg = span_pages(filled, end, ps)
+        need = end_pg - start_pg                   # >= 1: end > filled
+        while True:
+            ids = self.allocator.alloc(need)
+            if ids is not None:
+                break
+            if self._reclaim_pages(need):
+                continue
+            # a chunking slot may steal pages only from slots YOUNGER than
+            # itself (admit_seq order — tie-free where t_admit need not
+            # be); with none to evict it SUSPENDS (pages retained) until
+            # older requests finish. Preempting an older slot here would
+            # break the oldest-always-finishes invariant and can livelock:
+            # two part-prefilled requests ping-ponging each other's pages
+            # forever (found by the serving-oracle fuzz harness).
+            younger = [s for s in self.active_slots
+                       if self.slot_req[s].admit_seq > req.admit_seq]
+            if not younger:
+                return 0
+            self._preempt(max(younger,
+                              key=lambda s: self.slot_req[s].admit_seq))
+        self.page_tbl[slot, start_pg:end_pg] = ids
+        self.slot_pages[slot].extend(ids)
+        # the request's OWN earlier chunks are the "shared prefix"
+        logits = self._run_partial_prefill(slot, req, filled, end)
+        self.n_chunks += 1
+        if end < plen:
+            self.slot_chunk_pos[slot] = end        # suspended till next step
+            return 0
+        # final chunk: chunking -> decoding
+        self.slot_chunk_pos[slot] = -1
+        self.slot_pos[slot] = plen
+        tok = self._sample(np.asarray(logits[0, -1], np.float32))
+        self._emit(req, slot, tok, time.monotonic())
+        return 1
 
     def step(self) -> int:
         """One engine iteration: admit into free slots, then one batched
@@ -615,15 +827,30 @@ class Engine:
                     self.scheduler.requeue(r)
                 break
             self._admit(req, free.pop(), n_shared, shared_ids)
-            emitted += 1                       # prefill emits a first token
+            if not self.chunked:
+                emitted += 1                   # prefill emits a first token
 
+        if self.chunked:
+            emitted += self._chunk_step()
         if self.paged:
             self._ensure_decode_pages()
         active = self.active_slots
+        if self.chunked:
+            active = [s for s in active if self.slot_chunk_pos[s] < 0]
         if not active:
             return emitted
         token = jnp.asarray(self.slot_tok[:, None])
-        pos = jnp.asarray(self.slot_pos)
+        if self.chunked and len(active) < len(self.active_slots):
+            # chunking slots ride the batched decode fully masked: pos -1
+            # gives them valid length 0, and the KV write's page index
+            # (-1 // page_size = -1) wraps to the table row's LAST column
+            # — always unallocated mid-prompt (filled < plen <= max_len-1
+            # and page-aligned), so the scatter drops it.
+            posv = self.slot_pos.copy()
+            posv[self.slot_chunk_pos >= 0] = -1
+            pos = jnp.asarray(posv)
+        else:
+            pos = jnp.asarray(self.slot_pos)
         if self.paged:
             logits, self.cache = self._decode_jit(
                 self.params, token, self.cache, pos,
@@ -633,6 +860,8 @@ class Engine:
             logits, self.cache = self._decode_jit(self.params, token,
                                                   self.cache, pos)
         self.n_decode_steps += 1
+        if self.chunked and np.any(self.slot_chunk_pos >= 0):
+            self.n_interleaved_decode_steps += 1   # decode BETWEEN chunks
         rows = np.asarray(logits[:, -1], np.float32)
         now = time.monotonic()
         for slot in active:
@@ -673,4 +902,9 @@ class Engine:
             s.update(n_prefix_hits=self.n_prefix_hits,
                      n_shared_prompt_tokens=self.n_shared_prompt_tokens,
                      prefix_index_entries=self.prefix_index.n_entries)
+        if self.chunked:
+            s.update(n_chunks=self.n_chunks,
+                     prefill_chunk_tokens=self.chunk_tokens,
+                     n_interleaved_decode_steps=
+                     self.n_interleaved_decode_steps)
         return s

@@ -66,6 +66,12 @@ class Request:
     # admission-time rejection reason (None = served).
     n_preemptions: int = 0
     error: Optional[str] = None
+    # admission ORDER (engine-filled, monotone per admission incl.
+    # re-admission after preemption): the engine's age comparisons key on
+    # this, not t_admit — two same-step admissions can tie on a coarse
+    # monotonic clock, and a tie would turn the chunked engine's
+    # steal-only-from-younger rule into a mutual permanent suspend.
+    admit_seq: int = 0
 
     @property
     def latency(self) -> float:
@@ -119,19 +125,33 @@ def nbl_page_budget(cfg: ModelConfig, budget_bytes: int, *, page_size: int,
 
 
 class Scheduler:
-    """FIFO admission queue with a per-step prefill cap.
+    """FIFO admission queue with per-step prefill caps.
 
-    ``max_prefill_per_step`` bounds head-of-line blocking: each engine step
-    admits at most that many new requests (each admission runs a serial
-    prefill) before the batched decode of everything in flight.
+    ``max_prefill_per_step`` bounds head-of-line blocking in REQUESTS: each
+    engine step admits at most that many new requests (each admission runs
+    a serial prefill) before the batched decode of everything in flight.
+    ``max_prefill_tokens_per_step`` bounds it in TOKENS — the unit prefill
+    cost actually scales in: a request-count cap happily admits several
+    long prompts into one step (minutes of serial prefill while every
+    in-flight decode stalls), whereas the token budget stops admission
+    before the step's prompt tokens exceed it. The queue's HEAD request is
+    always admitted even when it alone busts the budget (an over-budget
+    prompt must not starve the queue forever); the engine's chunked
+    prefill is the finer-grained cure for that one prompt.
     """
 
-    def __init__(self, *, max_prefill_per_step: int = 4):
+    def __init__(self, *, max_prefill_per_step: int = 4,
+                 max_prefill_tokens_per_step: Optional[int] = None):
         if max_prefill_per_step < 1:
             raise ValueError("max_prefill_per_step must be >= 1 (the engine "
                              "drain loop would never admit work)")
+        if max_prefill_tokens_per_step is not None \
+                and max_prefill_tokens_per_step < 1:
+            raise ValueError("max_prefill_tokens_per_step must be >= 1 or "
+                             "None (the head request could never admit)")
         self.queue: deque[Request] = deque()
         self.max_prefill_per_step = max_prefill_per_step
+        self.max_prefill_tokens_per_step = max_prefill_tokens_per_step
         self._next_rid = 0
 
     def submit(self, prompt, max_new: int, *, enc=None,
@@ -149,9 +169,22 @@ class Scheduler:
         return req.rid
 
     def admit(self, free_slots: int) -> list[Request]:
-        """Pop up to min(free_slots, max_prefill_per_step) requests, FIFO."""
+        """Pop FIFO requests for this step: at most min(free_slots,
+        max_prefill_per_step) of them, stopping early before a prompt that
+        would push the step past ``max_prefill_tokens_per_step`` (the head
+        request always admits — see the class docstring)."""
         n = min(free_slots, self.max_prefill_per_step, len(self.queue))
-        return [self.queue.popleft() for _ in range(n)]
+        budget = self.max_prefill_tokens_per_step
+        out: list[Request] = []
+        toks = 0
+        while len(out) < n:
+            nxt = self.queue[0]
+            if out and budget is not None \
+                    and toks + len(nxt.prompt) > budget:
+                break
+            toks += len(nxt.prompt)
+            out.append(self.queue.popleft())
+        return out
 
     def requeue(self, req: Request) -> None:
         """Return a request to the FRONT of the queue (admission deferred

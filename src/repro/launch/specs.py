@@ -56,6 +56,12 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
                      each seq_len tokens at absolute positions past a
                      shared seq_len-token prompt prefix whose pages —
                      prefix_tbl — are already resident in the paged pools)
+      prefill_chunked -> {"tokens", "prefix_tbl", "prefix_len", "cache"}
+                     (chunked prefill: one seq_len-token page-aligned
+                     chunk per request resuming behind 7*seq_len tokens
+                     of its OWN prompt already in the pools — the same
+                     partial-prefill jit as prefill_shared, prefix_tbl
+                     pointing at the request's earlier chunks)
     """
     b, s = shape.global_batch, shape.seq_len
     dt = jnp.dtype(cfg.compute_dtype)
@@ -94,4 +100,18 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
                 "prefix_tbl": sds((pps,), jnp.int32),
                 "prefix_len": sds((), jnp.int32),
                 "cache": paged_cache_shapes(cfg, b, 2 * s)}
+    if shape.kind == "prefill_chunked":
+        from repro.models.paging import DEFAULT_PAGE_SIZE, pages_per_seq
+        # chunk 8 of 8: s new tokens behind 7*s already-chunked ones; the
+        # 8*s max_len sizes the per-slot table rows and the pools. The
+        # prefix table is POW2-BUCKETED exactly as the engine compiles it
+        # (launch/engine._chunk_step buckets prefix_pages), so the dryrun
+        # lowers the jit that actually serves.
+        pre = 7 * s
+        pb = pages_per_seq(pre, DEFAULT_PAGE_SIZE)
+        pb = 1 << max(0, (pb - 1).bit_length())
+        return {"tokens": sds((b, s), jnp.int32),
+                "prefix_tbl": sds((pb,), jnp.int32),
+                "prefix_len": sds((), jnp.int32),
+                "cache": paged_cache_shapes(cfg, b, 8 * s)}
     raise ValueError(shape.kind)

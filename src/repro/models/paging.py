@@ -91,6 +91,25 @@ def pages_per_seq(max_len: int, page_size: int) -> int:
     return -(-max_len // page_size)
 
 
+def pow2_ceil(n: int) -> int:
+    """Smallest power of two >= n (1 for n <= 1): the bucketing unit for
+    prompt lengths AND prefix tables — ONE definition so the engine's jit
+    keys (launch/engine.py) and the dry-run input shapes (launch/specs.py)
+    can never disagree about which widths actually compile."""
+    return 1 << max(0, (int(n) - 1).bit_length())
+
+
+def span_pages(start_tok: int, end_tok: int,
+               page_size: int) -> tuple[int, int]:
+    """Logical page range [start_pg, end_pg) covering the token span
+    [start_tok, end_tok) — the chunk-granular allocation unit of the
+    engine's chunked prefill. ``start_tok`` must be page-aligned: a chunk
+    resumes only on a page boundary (its prefix table covers whole pages)."""
+    assert start_tok % page_size == 0, (start_tok, page_size)
+    assert end_tok > start_tok, (start_tok, end_tok)
+    return start_tok // page_size, pages_per_seq(end_tok, page_size)
+
+
 def n_caching_attn_layers(cfg: ModelConfig) -> int:
     """Attention invocations that carry a KV pool (shared blocks count once
     per invocation, like their caches; nbl/drop/mamba/cross contribute 0)."""

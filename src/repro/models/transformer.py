@@ -381,16 +381,21 @@ def prefill(cfg: ModelConfig, params: dict, tokens, *, enc=None,
     masked unattendable, so one jit serves every prompt length in the
     bucket. Not valid for SSM stacks (padding corrupts the scanned state).
 
-    PARTIAL prefill (prefix sharing): with ``prefix_cache`` (the paged
-    cache tree), ``prefix_tbl`` ((Pb,) int32 physical page per logical
-    prefix page, -1 padding) and ``prefix_len`` (traced token count, a
-    page multiple), ``tokens`` holds only the SUFFIX from the first
-    divergent page — embedded at absolute positions prefix_len + i and
-    attending the shared prefix KV through the table. The returned cache
-    covers the suffix only; ``valid_len`` then counts valid SUFFIX tokens
-    and logits come from suffix position valid_len - 1. Requires a
-    stack with no SSM blocks (their scanned state cannot resume
-    mid-sequence).
+    PARTIAL prefill (prefix sharing AND chunked prefill): with
+    ``prefix_cache`` (the paged cache tree), ``prefix_tbl`` ((Pb,) int32
+    physical page per logical prefix page, -1 padding) and ``prefix_len``
+    (traced token count, a page multiple), ``tokens`` holds only the
+    SUFFIX from the first divergent page — embedded at absolute positions
+    prefix_len + i and attending the already-paged prefix KV through the
+    table. The engine reuses this ONE code path for two callers that
+    differ only in the table's provenance: prefix sharing points it at
+    ANOTHER request's published prompt pages (launch/engine._admit),
+    chunked prefill points it at the request's OWN earlier chunks
+    (launch/engine._chunk_step) — there is no chunk-specific model code
+    below the page table. The returned cache covers the suffix only;
+    ``valid_len`` then counts valid SUFFIX tokens and logits come from
+    suffix position valid_len - 1. Requires a stack with no SSM blocks
+    (their scanned state cannot resume mid-sequence).
     """
     cache_len = cache_len or tokens.shape[1]
     dt = jnp.dtype(cfg.compute_dtype)

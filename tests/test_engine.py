@@ -297,3 +297,32 @@ def test_scheduler_fifo_and_prefill_cap():
     got = sched.admit(free_slots=1)
     assert [r.rid for r in got] == [2]
     assert len(sched) == 2
+
+
+def test_scheduler_token_budget_paces_admission():
+    """Regression: the request-count cap admits several long prompts into
+    one step (their serial prefills stall every in-flight decode); the
+    TOKEN budget stops admission before the step's prompt tokens exceed it
+    — while the queue HEAD always admits, so an over-budget prompt can
+    never starve the queue."""
+    sched = Scheduler(max_prefill_per_step=4,
+                      max_prefill_tokens_per_step=10)
+    for n in (8, 8, 3, 2):
+        sched.submit(np.arange(n), 4)
+    got = sched.admit(free_slots=4)
+    assert [r.rid for r in got] == [0]        # 8 + 8 > 10: stop after head
+    got = sched.admit(free_slots=4)
+    assert [r.rid for r in got] == [1]        # 8 + 3 > 10
+    got = sched.admit(free_slots=4)
+    assert [r.rid for r in got] == [2, 3]     # 3 + 2 <= 10
+    # an over-budget head request still admits (no starvation)
+    sched.submit(np.arange(64), 1)
+    assert [r.rid for r in sched.admit(free_slots=4)] == [4]
+    # request-count cap still binds under an ample token budget
+    loose = Scheduler(max_prefill_per_step=2,
+                      max_prefill_tokens_per_step=1000)
+    for _ in range(4):
+        loose.submit(np.array([1, 2]), 1)
+    assert len(loose.admit(free_slots=4)) == 2
+    with pytest.raises(ValueError):
+        Scheduler(max_prefill_tokens_per_step=0)

@@ -1,0 +1,199 @@
+"""Serving-oracle fuzz harness: randomized workloads replayed through the
+Engine in all four serving modes (ring / paged / prefix-shared / chunked)
+plus the chunked+shared composition, asserting TOKEN-EXACT parity against
+the single-request generate() oracle and allocator/refcount invariants
+after every step.
+
+Workloads are drawn from a seeded numpy RNG, so every example is
+deterministic and replayable from its (mode, seed) pair alone: prompt
+lengths, shared-prefix structure, max_new, EOS, submission schedule (some
+requests join mid-stream), slot counts, page-pool pressure (pools shrunk to
+force preemption) and chunk sizes all vary. The deterministic suite runs
+``NBL_FUZZ_EXAMPLES`` seeds per mode (default 3; CI raises it to 50 for
+200 examples across the four modes); the hypothesis property on top draws
+arbitrary seeds and shrinks failures, and skips cleanly when hypothesis is
+absent (tests/_hypothesis_compat.py).
+
+Engines share jitted step functions through launch.engine's module cache,
+so the marginal example costs host-loop time, not recompilation.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.launch.engine import Engine
+from repro.launch.serve import generate
+from repro.models import decode_step, init_params, prefill
+from repro.models.paging import PageAllocator, pages_per_seq
+
+MAX_LEN = 32
+PAGE_SIZE = 4
+
+MODES = {
+    "ring": {},
+    "paged": dict(paged=True, page_size=PAGE_SIZE),
+    "prefix": dict(paged=True, page_size=PAGE_SIZE, prefix_sharing=True),
+    "chunked": dict(paged=True, page_size=PAGE_SIZE, chunked_prefill=True),
+    # the composed mode the engine advertises: progressive index
+    # publication + mid-chunk suspension/preemption under one roof
+    "chunked_shared": dict(paged=True, page_size=PAGE_SIZE,
+                           chunked_prefill=True, prefix_sharing=True),
+}
+
+ARCHS = ("tiny-dense", "tiny-swa", "tiny-gemma")
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(arch):
+    cfg = get_config(arch)
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+@functools.lru_cache(maxsize=None)
+def _ref_fns(cfg):
+    """One jitted (prefill, decode) pair per config at a FIXED cache_len:
+    jax's trace cache then compiles each distinct prompt length once per
+    process instead of once per example."""
+    prefill_fn = jax.jit(
+        lambda p, t: prefill(cfg, p, t, cache_len=MAX_LEN))
+    decode_fn = jax.jit(
+        lambda p, t, c, i: decode_step(cfg, p, t, c, i))
+    return prefill_fn, decode_fn
+
+
+def _oracle(cfg, params, prompt, max_new, eos_id):
+    """generate() reference, truncated at the first EOS (inclusive) the
+    way the engine retires a slot."""
+    out = np.asarray(generate(cfg, params, jnp.asarray(prompt)[None],
+                              max_new=max_new,
+                              use_jit_fns=_ref_fns(cfg)))[0]
+    if eos_id is not None:
+        hits = np.nonzero(out == eos_id)[0]
+        if hits.size:
+            out = out[:hits[0] + 1]
+    return out
+
+
+def _draw_workload(seed: int) -> dict:
+    """Deterministic randomized workload: ragged prompts (optionally
+    behind a shared prefix), per-request max_new, EOS, a mid-stream
+    submission schedule, slot count, pool pressure and chunk size."""
+    rng = np.random.default_rng(seed)
+    cfg, _ = _setup(ARCHS[rng.integers(0, len(ARCHS))])
+    n_req = int(rng.integers(2, 7))
+    share = rng.random() < 0.5
+    sys_len = int(rng.integers(PAGE_SIZE, 3 * PAGE_SIZE + 1)) if share else 0
+    sys_p = rng.integers(0, cfg.vocab_size, sys_len)
+    reqs = []
+    for _ in range(n_req):
+        max_new = int(rng.integers(1, 7))
+        if share and rng.random() < 0.7:
+            tail = int(rng.integers(1, MAX_LEN - max_new - sys_len + 1))
+            prompt = np.concatenate([sys_p, rng.integers(
+                0, cfg.vocab_size, tail)]).astype(np.int32)
+        else:
+            plen = int(rng.integers(1, MAX_LEN - max_new + 1))
+            prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        delay = int(rng.integers(0, 6)) if rng.random() < 0.4 else 0
+        reqs.append((prompt, max_new, delay))
+    pps = pages_per_seq(MAX_LEN, PAGE_SIZE)
+    n_slots = int(rng.integers(1, 4))
+    return dict(
+        arch=cfg.name,
+        reqs=reqs,
+        eos_id=int(rng.integers(0, cfg.vocab_size))
+        if rng.random() < 0.3 else None,
+        n_slots=n_slots,
+        # pool SHRUNK within the constructed full-reservation size
+        # (n_slots * pps) to force suspension/preemption, never below the
+        # lone-request floor pps — and never past the pool arrays: ids
+        # beyond them would clip-gather into the wrong page
+        n_pages=int(rng.integers(pps, n_slots * pps + 1)),
+        chunk_tokens=int(rng.choice([PAGE_SIZE, 3 * PAGE_SIZE, MAX_LEN * 2])),
+        shared_prefix_len=sys_len,
+    )
+
+
+def _check_invariants(eng: Engine) -> None:
+    if not eng.paged:
+        return
+    eng.allocator.check_invariants()
+    # every allocated page-table entry of an active slot is referenced,
+    # and each slot's reference list covers its table row exactly
+    for slot in range(eng.n_slots):
+        row = set(int(p) for p in eng.page_tbl[slot] if p >= 0)
+        held = set(eng.slot_pages[slot])
+        assert row <= held, (slot, row, held)
+        for pid in held:
+            assert eng.allocator.refcount(pid) >= 1, (slot, pid)
+        if eng.slot_req[slot] is None:
+            assert not held and not row, (slot, held, row)
+
+
+def _replay(mode: str, seed: int) -> None:
+    w = _draw_workload(seed)
+    cfg, params = _setup(w["arch"])
+    kw = dict(MODES[mode])
+    if kw.get("chunked_prefill"):
+        kw["prefill_chunk_tokens"] = w["chunk_tokens"]
+    eng = Engine(cfg, params, max_len=MAX_LEN, n_slots=w["n_slots"],
+                 eos_id=w["eos_id"], **kw)
+    if eng.paged:
+        n_pages = w["n_pages"]
+        eng.allocator = PageAllocator(n_pages)
+        eng.n_pages = n_pages
+
+    pending = sorted(enumerate(w["reqs"]), key=lambda r: r[1][2])
+    rids: dict[int, int] = {}
+    t = 0
+    while pending or eng.has_work:
+        while pending and pending[0][1][2] <= t:
+            i, (prompt, max_new, _) = pending.pop(0)
+            rids[i] = eng.submit(prompt, max_new)
+        eng.step()
+        _check_invariants(eng)
+        t += 1
+        assert t < 600, "fuzz workload failed to drain"
+
+    # token-exact parity with the generate() oracle, request by request
+    for i, (prompt, max_new, _) in enumerate(w["reqs"]):
+        want = _oracle(cfg, params, prompt, max_new, w["eos_id"])
+        got = np.asarray(eng.finished[rids[i]].tokens, np.int32)
+        np.testing.assert_array_equal(
+            got, want, err_msg=f"mode={mode} seed={seed} req={i} "
+                               f"(arch={w['arch']})")
+
+    # end state: only the prefix index may still hold pages
+    if eng.paged:
+        held = eng.prefix_index.n_entries if eng.prefix_sharing else 0
+        assert eng.allocator.in_use == held, (eng.allocator.in_use, held)
+        eng.allocator.check_invariants()
+
+
+N_EXAMPLES = int(os.environ.get("NBL_FUZZ_EXAMPLES", "3"))
+
+
+@pytest.mark.parametrize("mode", list(MODES))
+@pytest.mark.parametrize("seed", range(N_EXAMPLES))
+def test_serving_oracle_fuzz(mode, seed):
+    """Deterministic fuzz sweep: NBL_FUZZ_EXAMPLES seeds x 5 engine modes
+    (CI runs 50 x 5 = 250 examples)."""
+    _replay(mode, seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_serving_oracle_property(seed):
+    """Hypothesis-driven variant of the same oracle: arbitrary seeds,
+    shrinking on failure; every mode replays the identical workload."""
+    for mode in MODES:
+        _replay(mode, seed)
