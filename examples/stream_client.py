@@ -1,0 +1,141 @@
+"""Minimal client for the newline-JSON TCP serving frontend.
+
+Speaks the protocol documented in ``src/repro/launch/server.py``: submit
+streaming generation requests, watch tokens arrive live, cancel one
+mid-stream. Usable as a CLI demo against a running server::
+
+    PYTHONPATH=src python -m repro.launch.server --port 0 &   # prints port
+    python examples/stream_client.py --port <port> --n 3 --cancel-first 2
+
+or as a library (the CI async smoke imports ``Client`` from this file).
+No repro imports — the client needs only the stdlib, like a real remote
+caller would.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import socket
+from collections import deque
+from typing import Optional
+
+
+class Client:
+    """One connection to the serving frontend.
+
+    Events arrive interleaved across in-flight requests; ``events()``
+    yields them in arrival order. Ops that wait for a specific reply
+    (``submit``, ``stats``) buffer any events they skip past, and
+    ``events()`` drains that buffer first — nothing is lost."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 timeout: Optional[float] = None):
+        self._sock = socket.create_connection((host, port), timeout=timeout)
+        self._reader = self._sock.makefile("r", encoding="utf-8")
+        self._buf: deque = deque()
+
+    def send(self, obj: dict) -> None:
+        self._sock.sendall((json.dumps(obj) + "\n").encode())
+
+    def _recv(self) -> dict:
+        line = self._reader.readline()
+        if not line:
+            raise ConnectionError("server closed the connection")
+        return json.loads(line)
+
+    def _wait_for(self, event: str) -> dict:
+        """Next event of the given type; everything skipped is buffered —
+        except "error" events, which RAISE: while waiting for a reply, an
+        error is the server telling us that reply is never coming (e.g. a
+        submit against a shut-down engine), and buffering past it would
+        block forever."""
+        while True:
+            ev = self._recv()
+            if ev.get("event") == event:
+                return ev
+            if ev.get("event") == "error":
+                raise RuntimeError(f"server error: {ev.get('error')}")
+            self._buf.append(ev)
+
+    def events(self):
+        """Yield events in arrival order (buffered ones first)."""
+        while True:
+            yield self._buf.popleft() if self._buf else self._recv()
+
+    def submit(self, prompt, max_new: int, *, stream: bool = True,
+               tag=None) -> int:
+        """Submit a request; returns its rid (a rejected submission still
+        gets a rid — its "done" event carries status/error)."""
+        self.send({"op": "submit", "prompt": [int(t) for t in prompt],
+                   "max_new": int(max_new), "stream": stream, "tag": tag})
+        return int(self._wait_for("submitted")["rid"])
+
+    def cancel(self, rid: int) -> None:
+        self.send({"op": "cancel", "rid": int(rid)})
+
+    def stats(self) -> dict:
+        self.send({"op": "stats"})
+        return self._wait_for("stats")["stats"]
+
+    def shutdown(self) -> None:
+        """Ask the server to drain and exit."""
+        self.send({"op": "shutdown"})
+
+    def close(self) -> None:
+        try:
+            # the makefile wrapper holds its own reference to the socket;
+            # FIN (which tells the server to cancel anything we left in
+            # flight) is only sent once both are closed
+            self._reader.close()
+            self._sock.close()
+        except OSError:
+            pass
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--n", type=int, default=3, help="requests to submit")
+    ap.add_argument("--prompt-len", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--vocab", type=int, default=256,
+                    help="prompt tokens drawn from [0, vocab)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cancel-first", type=int, default=None, metavar="K",
+                    help="cancel the first request after K streamed tokens")
+    args = ap.parse_args()
+
+    rng = random.Random(args.seed)
+    cli = Client(args.host, args.port)
+    rids = [cli.submit([rng.randrange(args.vocab)
+                        for _ in range(args.prompt_len)],
+                       args.max_new, tag=i) for i in range(args.n)]
+    victim = rids[0] if args.cancel_first is not None else None
+    tokens: dict = {r: [] for r in rids}
+    done: dict = {}
+    for ev in cli.events():
+        kind = ev.get("event")
+        if kind == "token":
+            tokens[ev["rid"]].append(ev["token"])
+            print(f"rid={ev['rid']} token[{ev['index']}]={ev['token']}")
+            if ev["rid"] == victim \
+                    and len(tokens[victim]) == args.cancel_first:
+                print(f"cancelling rid={victim} mid-stream")
+                cli.cancel(victim)
+        elif kind == "done":
+            done[ev["rid"]] = ev
+            print(f"rid={ev['rid']} DONE status={ev['status']} "
+                  f"n_tokens={len(ev['tokens'])} error={ev['error']}")
+            if len(done) == len(rids):
+                break
+    st = cli.stats()
+    print(f"server stats: n={st.get('n')} cancelled={st.get('n_cancelled')} "
+          f"rejected={st.get('n_rejected')} "
+          f"pages_in_use={st.get('pages_in_use', 'n/a')}")
+    cli.close()
+
+
+if __name__ == "__main__":
+    main()

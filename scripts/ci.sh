@@ -11,9 +11,15 @@
 #   5. chunked-prefill smoke: a long prompt admitted one page-aligned
 #      chunk per step next to two active decodes — decode tokens emitted
 #      BETWEEN chunks, exact parity — then the serving-oracle fuzz suite
-#      at a bounded example count (50 seeds x 5 engine modes = 250
-#      randomized workloads vs generate()) and the chunked_throughput
-#      benchmark scenario under --fast
+#      at a bounded example count (50 seeds x 5 engine modes x {sync,
+#      async} = 500 randomized workloads vs generate()) and the
+#      chunked_throughput benchmark scenario under --fast
+#   6. async serving smoke: the newline-JSON TCP server is started on a
+#      free port, 3 overlapping requests are streamed through the
+#      examples/stream_client.py Client, one is cancelled mid-stream —
+#      survivors exact-match generate(), the victim's partial tokens are a
+#      greedy-exact prefix, and the page pool ends with ZERO leaked pages;
+#      then the async_throughput benchmark scenario under --fast
 #
 #   bash scripts/ci.sh
 set -euo pipefail
@@ -165,10 +171,89 @@ print(f"chunked smoke OK: {s['n_chunks']} chunks, "
       f"exact parity")
 EOF
 
-echo "== serving-oracle fuzz suite (250 examples: 50 seeds x 5 modes) =="
+echo "== serving-oracle fuzz suite (500 examples: 50 seeds x 5 modes x {sync,async}) =="
 NBL_FUZZ_EXAMPLES=50 python -m pytest -q tests/test_serving_fuzz.py
 
 echo "== chunked_throughput scenario (--fast) =="
 python -m benchmarks.run --fast --only chunked_throughput > /dev/null
 test -s benchmarks/out/chunked_throughput.json
+
+echo "== async serving smoke (TCP server: stream 3, cancel 1 mid-stream) =="
+python - <<'EOF'
+import warnings; warnings.filterwarnings("ignore")
+import importlib.util, subprocess, sys
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.launch.serve import generate
+from repro.models import init_params
+
+# the server inits params from (config, seed), so this process can
+# recompute generate() references for token-exact parity over the wire
+# --step-delay-s widens each decode step so the mid-stream cancel below
+# cannot race the victim's completion on a descheduled CI box
+proc = subprocess.Popen(
+    [sys.executable, "-m", "repro.launch.server", "--port", "0",
+     "--config", "tiny-dense", "--seed", "0", "--max-len", "48",
+     "--n-slots", "2", "--paged", "--page-size", "4",
+     "--step-delay-s", "0.02"],
+    stdout=subprocess.PIPE, text=True)
+try:
+    line = proc.stdout.readline().strip()
+    assert line.startswith("LISTENING"), line
+    port = int(line.split()[1])
+
+    spec = importlib.util.spec_from_file_location(
+        "stream_client", "examples/stream_client.py")
+    sc = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(sc)
+    cli = sc.Client("127.0.0.1", port, timeout=300)
+
+    cfg = get_config("tiny-dense")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 9, 7)]
+    new = (6, 6, 32)
+    refs = [np.asarray(generate(cfg, params, jnp.asarray(p)[None],
+                                max_new=mn))[0]
+            for p, mn in zip(prompts, new)]
+
+    rids = [cli.submit(p, mn, tag=i)
+            for i, (p, mn) in enumerate(zip(prompts, new))]
+    victim = rids[2]
+    tokens = {r: [] for r in rids}; done = {}
+    for ev in cli.events():
+        if ev["event"] == "token":
+            tokens[ev["rid"]].append(ev["token"])
+            if ev["rid"] == victim and len(tokens[victim]) == 2:
+                cli.cancel(victim)           # mid-stream, from the client
+        elif ev["event"] == "done":
+            done[ev["rid"]] = ev
+            if len(done) == 3:
+                break
+    for i in range(2):                       # survivors: exact parity
+        assert done[rids[i]]["status"] == "finished", done[rids[i]]
+        np.testing.assert_array_equal(np.asarray(done[rids[i]]["tokens"]),
+                                      refs[i])
+    assert done[victim]["status"] == "cancelled", done[victim]
+    nv = len(done[victim]["tokens"])
+    assert 2 <= nv < 32                      # stopped mid-generation
+    np.testing.assert_array_equal(np.asarray(done[victim]["tokens"]),
+                                  refs[2][:nv])   # greedy-exact prefix
+    st = cli.stats()
+    assert st["pages_in_use"] == 0, st       # ZERO leaked pages
+    assert st["n_cancelled"] == 1 and st["n"] == 2, st
+    cli.shutdown(); cli.close()
+    proc.wait(timeout=120)
+    assert proc.returncode == 0, proc.returncode
+    print(f"async smoke OK: 2 survivors exact, victim cancelled at {nv} "
+          f"tokens, 0 leaked pages, clean server exit")
+finally:
+    if proc.poll() is None:
+        proc.kill()
+EOF
+
+echo "== async_throughput scenario (--fast) =="
+python -m benchmarks.run --fast --only async_throughput > /dev/null
+test -s benchmarks/out/async_throughput.json
 echo "CI OK"

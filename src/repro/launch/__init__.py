@@ -1,3 +1,3 @@
 from repro.launch.mesh import make_production_mesh, make_mesh  # noqa: F401
-from repro.launch.engine import Engine  # noqa: F401
+from repro.launch.engine import AsyncEngine, Engine, Stream  # noqa: F401
 from repro.launch.scheduler import Scheduler, nbl_slot_budget  # noqa: F401

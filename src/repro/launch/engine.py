@@ -1,7 +1,14 @@
 """Continuous-batching serving engine over slot-indexed or PAGED KV caches.
 
-Architecture (scheduler → engine → cache):
+Architecture (frontend → scheduler → engine → cache):
 
+  AsyncEngine (this module) + launch/server.py
+      The serving HOST LOOP: a background thread drives ``Engine.step()``
+      while client threads submit streaming requests (per-request token
+      queues fed straight from ``_emit``), cancel them in any lifecycle
+      state, and get reject-with-error backpressure past a bounded pending
+      count. launch/server.py puts a newline-JSON TCP socket in front of
+      it. Works over every engine layout below — it adds no model code.
   Scheduler (launch/scheduler.py)
       FIFO queue + NBL-aware admission budget: a fixed HBM byte budget
       divided by the per-request footprint. NBL-linearized layers carry no
@@ -89,6 +96,15 @@ Architecture (scheduler → engine → cache):
                                              resume)     conditioned KV)
           chunked_prefill      yes    yes    no (scan    yes (enc rides
                                              resume)     every chunk)
+          async / server       yes    yes    yes*        yes*
+                               (*inherits the WRAPPED layout's gates
+                                verbatim: AsyncEngine/launch.server drive
+                                step() from a thread and add no model code,
+                                so e.g. async+chunked still refuses SSM
+                                stacks and async+prefix_sharing refuses
+                                SSM and cross-attn — the Engine
+                                constructor raises before the host loop
+                                ever starts)
   Cache
       (L, n_slots, ...) slot rows, or (L, n_pages, KV, page_size, hd)
       pools + host page table (models/paging.py).
@@ -109,8 +125,11 @@ sharding.py), batch/slot dims shard over "dp".
 """
 from __future__ import annotations
 
+import queue as _queue
+import threading
 import time
-from typing import Optional
+from collections import deque
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -318,7 +337,16 @@ class Engine:
         self.n_interleaved_decode_steps = 0
         self.n_prefill_tokens = 0      # valid (unpadded) tokens prefilled
         self.n_preemptions = 0
-        self.n_rejected = 0            # admission-time length-guard drops
+        self.n_rejected = 0            # reject-with-error drops (any path)
+        self.n_cancelled = 0           # cancel() terminal retirements
+        # emission hooks (AsyncEngine installs these): on_token(req, tok)
+        # fires for every generated token the moment _emit records it;
+        # on_finish(req) fires exactly once when a request reaches ANY
+        # terminal state (finished / rejected / cancelled). Both run on
+        # whichever thread drives the engine — keep them cheap.
+        self.on_token: Optional[Callable] = None
+        self.on_finish: Optional[Callable] = None
+        self._count_lock = threading.Lock()    # guards n_rejected only
         self._admit_seq = 0            # monotone admission counter (age)
         self.n_prefix_hits = 0         # admissions served a cached prefix
         self.n_shared_prompt_tokens = 0  # prompt tokens skipped via sharing
@@ -371,14 +399,41 @@ class Engine:
 
     # ------------------------------------------------------------- admin --
 
-    def submit(self, prompt, max_new: int, *, enc=None) -> int:
-        """Queue a request; returns its id. ``prompt`` 1-D int tokens."""
+    def submit(self, prompt, max_new: int, *, enc=None,
+               strict: bool = False) -> int:
+        """Queue a request; returns its id. ``prompt`` 1-D int tokens.
+
+        An unservable submission (empty prompt, ``max_new < 1``, or
+        prompt + max_new > max_len) is REJECTED-WITH-ERROR: the request is
+        recorded terminally (``Request.error`` set, surfaced in
+        ``finished`` / ``n_rejected``, excluded from latency percentiles)
+        and its rid still returned — the SAME surface the admission-time
+        guard uses for direct scheduler submissions, so a serving frontend
+        handles every rejection by reading one field instead of catching
+        an exception that would kill its host loop mid-request.
+        ``strict=True`` restores the raising behavior for direct/test
+        use."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
-        if prompt.size + max_new > self.max_len:
-            raise ValueError(
-                f"prompt({prompt.size}) + max_new({max_new}) exceeds "
-                f"engine max_len={self.max_len}")
-        return self.scheduler.submit(prompt, max_new, enc=enc)
+        if prompt.size == 0:
+            err = "empty prompt"
+        elif max_new < 1:
+            err = f"max_new must be >= 1, got {max_new}"
+        elif prompt.size + max_new > self.max_len:
+            err = (f"prompt({prompt.size}) + max_new({max_new}) exceeds "
+                   f"engine max_len={self.max_len}")
+        else:
+            return self.scheduler.submit(prompt, max_new, enc=enc)
+        if strict:
+            raise ValueError(err)
+        return self._submit_rejected(prompt, max_new, err, enc=enc)
+
+    def _submit_rejected(self, prompt, max_new: int, reason: str, *,
+                         enc=None) -> int:
+        """Record a request as rejected WITHOUT queueing it (unservable
+        submission, or AsyncEngine backpressure); returns its rid."""
+        req = self.scheduler.make_request(prompt, max_new, enc=enc)
+        self._reject(req, reason)
+        return req.rid
 
     @property
     def active_slots(self) -> list[int]:
@@ -492,6 +547,8 @@ class Engine:
         if not req.t_first:
             req.t_first = now
         self.slot_tok[slot] = tok
+        if self.on_token is not None:
+            self.on_token(req, tok)
         done = (len(req.tokens) >= req.max_new
                 or (self.eos_id is not None and tok == self.eos_id))
         if done:
@@ -503,6 +560,8 @@ class Engine:
             self.slot_req[slot] = None
             if self.paged:
                 self._release_pages(slot)
+            if self.on_finish is not None:
+                self.on_finish(req)
 
     def _release_pages(self, slot: int) -> None:
         """Drop this slot's references; a page leaves the pool only when no
@@ -618,7 +677,69 @@ class Engine:
         req.error = reason
         req.t_finish = time.monotonic()
         self.finished[req.rid] = req
-        self.n_rejected += 1
+        # the one counter two threads can bump (a client thread rejecting
+        # in submit vs the step thread rejecting at admission): += is a
+        # non-atomic read-modify-write
+        with self._count_lock:
+            self.n_rejected += 1
+        if self.on_finish is not None:
+            self.on_finish(req)
+
+    def cancel(self, rid: int) -> bool:
+        """Terminally retire request ``rid`` in ANY lifecycle state —
+        queued (never admitted), chunking mid-prompt, or decoding — with
+        allocator invariants intact: the slot's page references are
+        dropped wholesale (``slot_pages`` covers prompt, decode AND
+        pinned shared-prefix pages, so one unref releases every reference
+        this request holds; pages another slot or the prefix index still
+        references survive, exactly like retirement), the slot and its
+        chunking progress are recycled, and the request is recorded
+        cancelled-with-partial-tokens (generated-so-far tokens KEPT;
+        ``latency_stats`` excludes it from percentiles so a 0.0 t_first
+        sentinel can never become a garbage TTFT). Prefix-index entries
+        this request published are NOT torn down — the index holds its own
+        reference per page and hot prefixes outlive their publisher.
+
+        Returns True if the request was found live and cancelled; False if
+        it is already terminal (or unknown). NOT thread-safe: call from
+        the thread driving ``step()`` — the async host loop routes client
+        cancellations through an inbox drained between steps."""
+        if rid in self.finished:
+            return False
+        for slot, req in enumerate(self.slot_req):
+            if req is not None and req.rid == rid:
+                if self.paged:
+                    self._release_pages(slot)
+                self.slot_req[slot] = None
+                self.slot_chunk_pos[slot] = -1
+                return self._finish_cancelled(req)
+        req = self.scheduler.remove(rid)
+        if req is not None:
+            return self._finish_cancelled(req)
+        return False
+
+    def _finish_cancelled(self, req: Request) -> bool:
+        req.cancelled = True
+        req.t_finish = time.monotonic()
+        self.finished[req.rid] = req
+        self.n_cancelled += 1
+        if self.on_finish is not None:
+            self.on_finish(req)
+        return True
+
+    def partials(self) -> dict[int, np.ndarray]:
+        """Generated-so-far tokens of every request still IN FLIGHT
+        (admitted slots mid-generation, plus queued requests as empty
+        arrays). ``run(max_steps)`` returning only ``finished`` used to
+        silently discard these partial generations — a bounded drain now
+        reads them here explicitly."""
+        out = {}
+        for req in self.slot_req:
+            if req is not None:
+                out[req.rid] = np.asarray(req.tokens, np.int32)
+        for req in list(self.scheduler.queue):
+            out[req.rid] = np.asarray(req.tokens, np.int32)
+        return out
 
     def _admit(self, req: Request, slot: int, n_shared: int = 0,
                shared_ids=()) -> None:
@@ -873,7 +994,10 @@ class Engine:
         return emitted
 
     def run(self, max_steps: Optional[int] = None) -> dict[int, np.ndarray]:
-        """Drain the queue; returns {rid: generated tokens (np.int32)}."""
+        """Drain the queue; returns {rid: generated tokens (np.int32)} of
+        TERMINAL requests only — a ``max_steps``-bounded run may stop with
+        work in flight, whose partial generations are exposed via
+        ``partials()`` (they are not silently dropped, just not final)."""
         steps = 0
         while self.has_work:
             self.step()
@@ -888,7 +1012,7 @@ class Engine:
         s.update(n_slots=self.n_slots, n_decode_steps=self.n_decode_steps,
                  n_prefills=self.n_prefills,
                  n_prefill_tokens=self.n_prefill_tokens,
-                 n_rejected=self.n_rejected)
+                 n_rejected=self.n_rejected, n_cancelled=self.n_cancelled)
         if self.paged:
             s.update(
                 n_pages=self.n_pages,
@@ -908,3 +1032,327 @@ class Engine:
                      n_interleaved_decode_steps=
                      self.n_interleaved_decode_steps)
         return s
+
+
+# --------------------------------------------------------------------------
+# Async serving host loop
+# --------------------------------------------------------------------------
+
+_END = object()     # stream-queue sentinel: the request reached a terminal
+
+
+class Stream:
+    """One request's live token feed out of an :class:`AsyncEngine`.
+
+    Iterating yields ints the moment the engine emits them and stops when
+    the request reaches a terminal state (``status`` is then one of
+    ``"finished"`` / ``"cancelled"`` / ``"rejected"`` / ``"aborted"``,
+    with ``error`` carrying the reject/abort reason). ``result()`` blocks
+    for the final token array instead. The feed is SINGLE-consumer: one
+    iterator owns the queue (``tokens`` always holds everything delivered
+    so far regardless).
+
+    Preemption safety: when the engine preempts a request it discards and
+    later REGENERATES its tokens from the prompt. The stream de-duplicates
+    by token index, and greedy decoding regenerates an identical prefix,
+    so a consumer never sees a token twice and the streamed sequence
+    stays token-exact with ``generate()``. With ``temperature > 0`` the
+    regenerated prefix may diverge from what was already streamed; at the
+    terminal transition the stream ADOPTS the engine's final token list,
+    so ``result()`` (and the server's "done" event) always return the
+    sequence the model actually committed — only the live-iterated feed
+    can contain stale pre-preemption samples.
+    """
+
+    def __init__(self, rid: int):
+        self.rid = rid
+        self.tokens: list[int] = []
+        self.status: Optional[str] = None
+        self.error: Optional[str] = None
+        self._q: _queue.Queue = _queue.Queue()
+        self._done = threading.Event()
+
+    def _push(self, tok: int, index: int) -> None:
+        if index < len(self.tokens):
+            return          # preemption replay: this index already streamed
+        self.tokens.append(int(tok))
+        self._q.put(int(tok))
+
+    def _end(self, status: str, error: Optional[str],
+             final_tokens=None) -> None:
+        if self._done.is_set():
+            return          # first terminal transition wins
+        if final_tokens is not None:
+            # authoritative: under temperature > 0 a preemption replay may
+            # have resampled, and the streamed prefix then disagrees with
+            # what the engine committed — result() must not splice rollouts
+            self.tokens = [int(t) for t in final_tokens]
+        self.status, self.error = status, error
+        self._done.set()
+        self._q.put(_END)
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def __iter__(self):
+        while True:
+            item = self._q.get()
+            if item is _END:
+                self._q.put(_END)   # stay terminal for any later iteration
+                return
+            yield item
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        """Block until terminal; returns the (possibly partial, if
+        cancelled) generated tokens as np.int32."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request {self.rid} still in flight")
+        return np.asarray(self.tokens, np.int32)
+
+
+class AsyncEngine:
+    """Async serving host loop: a background thread drives ``Engine.step()``
+    while client threads stream, cancel, and get backpressure.
+
+    The wrapped :class:`Engine` is NOT thread-safe, so every engine
+    mutation that touches slots/pages happens on ONE background step
+    thread; the client-facing surface is confined to operations that are
+    safe from other threads:
+
+      submit_stream()  validates + queues through ``Engine.submit``
+                       (scheduler append is single-consumer-safe, rid
+                       allocation is locked) and returns a :class:`Stream`
+                       fed straight from the engine's ``on_token`` hook —
+                       tokens arrive mid-step, not at step boundaries.
+                       Every rejection (oversize, backpressure past
+                       ``max_pending`` live requests) comes back as a
+                       Stream already ended with ``status="rejected"`` —
+                       never an exception that could kill a socket
+                       handler's loop.
+      cancel(rid)      enqueues the rid into an inbox the step loop drains
+                       BETWEEN steps, where ``Engine.cancel`` retires it
+                       from any lifecycle state with allocator invariants
+                       intact (pages + shared-prefix pins unref'd).
+      shutdown()       stops the loop — ``drain=True`` serves all pending
+                       work first, ``drain=False`` (or a drain timeout)
+                       cancels everything live so no pages leak — and
+                       re-raises any exception the step loop died on.
+
+    A step-loop exception does not vanish into the thread: it is captured,
+    every live request is cancelled (pages unref'd), open streams end with
+    ``status="aborted"``, and the exception re-raises at ``shutdown()``
+    (or the next ``submit_stream``). ``step_cb(engine)``, if given, runs
+    after every step on the step thread — the fuzz harness hangs allocator
+    invariant checks there.
+    """
+
+    def __init__(self, engine: Engine, *, max_pending: int = 64,
+                 step_cb: Optional[Callable] = None,
+                 retain_results: bool = True):
+        if engine.on_token is not None or engine.on_finish is not None:
+            raise ValueError("engine already has emission hooks installed "
+                             "(wrapped by another AsyncEngine?)")
+        if max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        self.engine = engine
+        self.max_pending = int(max_pending)
+        self.step_cb = step_cb
+        # retain_results=False drops each terminal request from
+        # engine.finished once its stream has the result — the memory
+        # knob for a long-running server (stats percentiles then cover
+        # only retained requests; the scalar counters keep counting)
+        self.retain_results = bool(retain_results)
+        self._lock = threading.RLock()
+        self._streams: dict[int, Stream] = {}
+        self._live: set[int] = set()
+        self._early_end: dict[int, tuple] = {}
+        # True only while submit_stream's own engine.submit call is on
+        # this stack (under _lock): the ONLY legitimate window in which a
+        # terminal _on_finish may precede stream registration. Gating the
+        # _early_end stash on it keeps terminals of requests submitted
+        # OUTSIDE submit_stream (engine.submit / direct Scheduler.submit
+        # on a wrapped engine) from accumulating stashes forever.
+        self._expect_early = False
+        self._cancels: deque = deque()
+        self._wake = threading.Event()
+        self._stop = False
+        self._dead = False      # set under _lock by _teardown's last act
+        self._drain_on_stop = True
+        self._exc: Optional[BaseException] = None
+        engine.on_token = self._on_token
+        engine.on_finish = self._on_finish
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="nbl-engine-step-loop")
+        self._thread.start()
+
+    # ------------------------------------------------------ client surface
+
+    def submit_stream(self, prompt, max_new: int, *, enc=None) -> Stream:
+        """Queue a request and return its live token :class:`Stream`.
+        Thread-safe. Unservable or over-capacity submissions return a
+        stream already ended with ``status="rejected"`` (reject-with-error
+        backpressure; ``stream.error`` says why)."""
+        if self._stop:
+            raise RuntimeError("AsyncEngine is shut down")
+        if self._exc is not None:
+            raise RuntimeError("engine step loop died") from self._exc
+        with self._lock:
+            self._expect_early = True
+            try:
+                if len(self._live) >= self.max_pending:
+                    rid = self.engine._submit_rejected(
+                        np.asarray(prompt, np.int32).reshape(-1), max_new,
+                        f"engine at capacity "
+                        f"(max_pending={self.max_pending} requests live)",
+                        enc=enc)
+                else:
+                    rid = self.engine.submit(prompt, max_new, enc=enc)
+            finally:
+                self._expect_early = False
+            s = Stream(rid)
+            if rid in self._early_end:      # rejected inside submit()
+                s._end(*self._early_end.pop(rid))
+                # rejections never retain engine-side: sustained overload
+                # is exactly what max_pending bounds, and pinning every
+                # rejected prompt in engine.finished would unbound it
+                self.engine.finished.pop(rid, None)
+            elif self._dead:
+                # lost the race with shutdown: the step thread already tore
+                # down (its final act, under this lock, was _dead = True),
+                # so nothing will ever serve or end this stream — end it
+                # here rather than leave result()/iteration hanging forever
+                s._end("aborted", "engine shut down before admission")
+            else:
+                # only LIVE streams are registered: a terminal stream is
+                # never looked up again, and leaving it in _streams would
+                # grow the wrapper by one entry per rejection — exactly
+                # the overload path backpressure exists for
+                self._streams[rid] = s
+                self._live.add(rid)
+        self._wake.set()
+        return s
+
+    def cancel(self, rid: int) -> None:
+        """Request cancellation of ``rid``, whatever its state (queued /
+        chunking mid-prompt / decoding). Applied by the step loop between
+        steps so allocator invariants hold; a no-op if the request is
+        already terminal. The stream ends with ``status="cancelled"`` and
+        keeps its partial tokens."""
+        self._cancels.append(rid)
+        self._wake.set()
+
+    def stats(self) -> dict:
+        return self.engine.stats()
+
+    def shutdown(self, *, drain: bool = True,
+                 timeout: Optional[float] = None) -> None:
+        """Stop the step loop. ``drain=True`` finishes all queued and
+        in-flight work first; ``drain=False`` — or a drain that outlives
+        ``timeout`` — cancels everything still live (pages unref'd,
+        streams ended) before stopping. Idempotent. Re-raises the step
+        loop's exception if it died."""
+        self._drain_on_stop = drain
+        self._stop = True
+        self._wake.set()
+        self._thread.join(timeout)
+        if self._thread.is_alive():         # drain overran: abort the rest
+            self._drain_on_stop = False
+            self._wake.set()
+            self._thread.join()
+        if self._exc is not None:
+            raise RuntimeError("engine step loop died") from self._exc
+
+    def __enter__(self) -> "AsyncEngine":
+        return self
+
+    def __exit__(self, etype, evalue, tb) -> None:
+        # on a client-side error, abort rather than serve out the backlog
+        self.shutdown(drain=etype is None)
+
+    # ---------------------------------------------------------- step loop
+
+    def _loop(self) -> None:
+        eng = self.engine
+        try:
+            while True:
+                while self._cancels:
+                    eng.cancel(self._cancels.popleft())
+                if self._stop and (not self._drain_on_stop
+                                   or not eng.has_work):
+                    break
+                if eng.has_work:
+                    eng.step()
+                    if self.step_cb is not None:
+                        self.step_cb(eng)
+                else:
+                    # purely event-driven idle: every producer mutates its
+                    # state (scheduler append / cancel inbox / stop flags)
+                    # BEFORE setting the wake event, and the loop re-derives
+                    # everything from that state after clear() — so a set
+                    # raced away by clear() is never a lost wakeup, and an
+                    # idle server burns zero CPU instead of polling
+                    self._wake.wait()
+                    self._wake.clear()
+        except BaseException as e:          # surfaced at shutdown/submit
+            self._exc = e
+        finally:
+            self._teardown()
+
+    def _teardown(self) -> None:
+        """Last act of the step thread: cancel whatever is still live (so
+        pages/pins are released even on abort or a step crash), close any
+        stream that survived that, and uninstall the engine hooks."""
+        with self._lock:
+            live = list(self._live)
+        for rid in live:
+            try:
+                self.engine.cancel(rid)     # ends its stream "cancelled"
+            except BaseException:
+                pass                        # engine already broken: below
+        msg = (f"engine step loop died: {self._exc!r}"
+               if self._exc is not None else "shutdown before completion")
+        with self._lock:
+            leftovers = [self._streams[r] for r in self._live]
+            self._live.clear()
+            self._dead = True   # submit_stream self-ends from here on
+        for s in leftovers:
+            s._end("aborted", msg)
+        self.engine.on_token = None
+        self.engine.on_finish = None
+
+    # ------------------------------------------------------- engine hooks
+
+    def _on_token(self, req: Request, tok: int) -> None:
+        with self._lock:
+            s = self._streams.get(req.rid)
+        if s is not None:
+            s._push(tok, len(req.tokens) - 1)
+
+    def _on_finish(self, req: Request) -> None:
+        status = ("cancelled" if req.cancelled
+                  else "rejected" if req.error is not None else "finished")
+        with self._lock:
+            self._live.discard(req.rid)
+            # a terminal stream is never looked up again (no further
+            # tokens, teardown walks _live only) — drop it here or a
+            # long-running server grows O(total requests)
+            s = self._streams.pop(req.rid, None)
+            if s is None:
+                if self._expect_early:
+                    # terminal before the stream registered (rejection
+                    # inside submit_stream's own engine.submit call, which
+                    # holds _lock around us): hand the end state back
+                    self._early_end[req.rid] = (status, req.error)
+                # else: a request submitted outside submit_stream (direct
+                # engine/scheduler use on a wrapped engine) — no stream
+                # will ever claim it; its record lives in engine.finished
+                return
+        s._end(status, req.error, final_tokens=req.tokens)
+        if not self.retain_results or req.error is not None:
+            # the stream carries the result to its consumer; the engine's
+            # finished dict (and with it latency_stats history) would
+            # otherwise also grow without bound under continuous traffic.
+            # Rejections are dropped UNCONDITIONALLY — overload must not
+            # grow memory per rejected request (see submit_stream)
+            self.engine.finished.pop(req.rid, None)

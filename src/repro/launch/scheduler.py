@@ -36,6 +36,7 @@ fixed budget, and paged >= ring on short-prompt mixes.
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -62,10 +63,15 @@ class Request:
     tokens: list = field(default_factory=list)
     # engine-filled lifecycle outcomes: preemption restarts (the TTFT clock
     # rewound this many times — latency_stats splits these out so restart
-    # latency cannot silently pollute paged-vs-ring comparisons) and the
-    # admission-time rejection reason (None = served).
+    # latency cannot silently pollute paged-vs-ring comparisons), the
+    # rejection reason (None = served; set at submit or admission), and the
+    # cancellation terminal state (Engine.cancel — generated-so-far tokens
+    # are KEPT as the partial result, but the request is excluded from the
+    # latency percentiles: its t_first may still be the 0.0 "unserved"
+    # sentinel, which used to yield garbage negative TTFTs).
     n_preemptions: int = 0
     error: Optional[str] = None
+    cancelled: bool = False
     # admission ORDER (engine-filled, monotone per admission incl.
     # re-admission after preemption): the engine's age comparisons key on
     # this, not t_admit — two same-step admissions can tie on a coarse
@@ -153,6 +159,28 @@ class Scheduler:
         self.max_prefill_per_step = max_prefill_per_step
         self.max_prefill_tokens_per_step = max_prefill_tokens_per_step
         self._next_rid = 0
+        # guards the mutations the async host loop splits across threads:
+        # rid allocation (client threads; a counter increment is not
+        # atomic) and queue append-vs-remove (client submit appends while
+        # the step thread scans in remove() — deque.remove runs a Python-
+        # level __eq__ per element, so an append landing mid-scan raises
+        # "deque mutated during remove()"). Step-thread-only single ops
+        # (admit's popleft, requeue's appendleft) stay lock-free: an
+        # individual deque op is atomic and only the step thread pops.
+        self._lock = threading.Lock()
+
+    def make_request(self, prompt, max_new: int, *, enc=None,
+                     now: Optional[float] = None) -> Request:
+        """Build a Request with a fresh rid WITHOUT queueing or validating
+        it — the engine's reject-with-error paths (oversize submit,
+        backpressure) record these terminally instead of serving them."""
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+        return Request(rid=rid,
+                       prompt=np.asarray(prompt, np.int32).reshape(-1),
+                       max_new=max_new, enc=enc,
+                       t_submit=time.monotonic() if now is None else now)
 
     def submit(self, prompt, max_new: int, *, enc=None,
                now: Optional[float] = None) -> int:
@@ -161,11 +189,9 @@ class Scheduler:
             raise ValueError("empty prompt")
         if max_new < 1:
             raise ValueError(f"max_new must be >= 1, got {max_new}")
-        req = Request(rid=self._next_rid, prompt=prompt, max_new=max_new,
-                      enc=enc, t_submit=time.monotonic() if now is None
-                      else now)
-        self._next_rid += 1
-        self.queue.append(req)
+        req = self.make_request(prompt, max_new, enc=enc, now=now)
+        with self._lock:                     # serialize vs remove()'s scan
+            self.queue.append(req)
         return req.rid
 
     def admit(self, free_slots: int) -> list[Request]:
@@ -192,6 +218,22 @@ class Scheduler:
         prompt, so any generated tokens must have been discarded)."""
         self.queue.appendleft(req)
 
+    def remove(self, rid: int) -> Optional[Request]:
+        """Pull a still-QUEUED request out of the queue (cancellation of a
+        request the engine never admitted). Returns it, or None if ``rid``
+        is not waiting here (already admitted, finished, or unknown).
+        Holds the scheduler lock for the whole scan+remove: client threads
+        append concurrently under the async host loop, and deque.remove's
+        per-element Python-level __eq__ can otherwise be interleaved with
+        an append, which CPython reports as "deque mutated during
+        remove()"."""
+        with self._lock:
+            for req in self.queue:
+                if req.rid == rid:
+                    self.queue.remove(req)
+                    return req
+        return None
+
     def __len__(self) -> int:
         return len(self.queue)
 
@@ -208,11 +250,19 @@ def latency_stats(requests: list[Request]) -> dict:
     subset, so restart latency is visible instead of silently skewing the
     headline percentiles' interpretation. Rejected requests (``error`` set)
     never served and are excluded from every percentile; they surface as
-    ``n_rejected``."""
+    ``n_rejected``. Cancelled requests (``cancelled`` — a terminal state,
+    possibly with a 0.0 ``t_first`` sentinel that would otherwise turn into
+    a garbage negative TTFT) are likewise excluded and surface as
+    ``n_cancelled``. Queue-delay percentiles (submit → admission wait, the
+    async host loop's backpressure signal) are reported over requests whose
+    admission timestamp survived (preemption rewinds it)."""
     rejected = [r for r in requests if r.error is not None]
-    done = [r for r in requests if r.t_finish > 0 and r.error is None]
+    cancelled = [r for r in requests if r.cancelled and r.error is None]
+    done = [r for r in requests
+            if r.t_finish > 0 and r.error is None and not r.cancelled]
     if not done:
-        return {"n": 0, "n_rejected": len(rejected)}
+        return {"n": 0, "n_rejected": len(rejected),
+                "n_cancelled": len(cancelled)}
     lat = np.array([r.latency for r in done])
     ttft = np.array([r.ttft for r in done])
     # decode rate excludes the prefill-emitted first token; requests that
@@ -225,6 +275,7 @@ def latency_stats(requests: list[Request]) -> dict:
     out = {
         "n": len(done),
         "n_rejected": len(rejected),
+        "n_cancelled": len(cancelled),
         "requests_per_s": len(done) / span,
         "tokens_per_s": sum(len(r.tokens) for r in done) / span,
         "p50_latency_s": float(np.percentile(lat, 50)),
@@ -239,4 +290,8 @@ def latency_stats(requests: list[Request]) -> dict:
     if dec.size:
         out["decode_tok_s_p50"] = float(np.percentile(dec, 50))
         out["decode_tok_s_min"] = float(dec.min())
+    qd = np.array([r.t_admit - r.t_submit for r in done if r.t_admit > 0])
+    if qd.size:
+        out["p50_queue_delay_s"] = float(np.percentile(qd, 50))
+        out["p99_queue_delay_s"] = float(np.percentile(qd, 99))
     return out

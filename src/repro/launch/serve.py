@@ -49,7 +49,11 @@ def serve_requests(cfg: ModelConfig, params, prompts: Sequence, *,
     eng = Engine(cfg, params, max_len=max_len, n_slots=n_slots,
                  cache_budget_bytes=cache_budget_bytes, eos_id=eos_id,
                  temperature=temperature, seed=seed)
-    rids = [eng.submit(p, max_new) for p in prompts]
+    # strict: this batch wrapper has no per-request error channel, so an
+    # unservable prompt must raise rather than silently come back as an
+    # empty token array (Engine.submit's default records-and-returns for
+    # the async serving frontend)
+    rids = [eng.submit(p, max_new, strict=True) for p in prompts]
     out = eng.run()
     return [out[r] for r in rids], eng.stats()
 

@@ -1,0 +1,565 @@
+"""Async serving host loop: AsyncEngine streaming/cancel/backpressure/
+shutdown, Engine.cancel in every lifecycle state (queued / chunking
+mid-prompt / decoding / prefix-referenced), the unified reject-with-error
+submit surface, run() partials, and the newline-JSON TCP server."""
+from __future__ import annotations
+
+import json
+import socket
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.engine import AsyncEngine, Engine
+from repro.launch.serve import generate
+from repro.models import init_params
+
+MODES = {
+    "ring": {},
+    "paged": dict(paged=True, page_size=4),
+    "prefix": dict(paged=True, page_size=4, prefix_sharing=True),
+    "chunked": dict(paged=True, page_size=4, chunked_prefill=True),
+    "chunked_shared": dict(paged=True, page_size=4, chunked_prefill=True,
+                           prefix_sharing=True),
+}
+
+
+def _setup(arch="tiny-dense", seed=0):
+    cfg = get_config(arch)
+    return cfg, init_params(jax.random.PRNGKey(seed), cfg)
+
+
+def _ref(cfg, params, prompt, max_new):
+    return np.asarray(generate(cfg, params, jnp.asarray(prompt)[None],
+                               max_new=max_new))[0]
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            for n in lens]
+
+
+def _assert_drained(eng):
+    """No slot holds a request and the pool holds only index references."""
+    assert all(r is None for r in eng.slot_req)
+    if eng.paged:
+        held = eng.prefix_index.n_entries if eng.prefix_sharing else 0
+        assert eng.allocator.in_use == held, (eng.allocator.in_use, held)
+        eng.allocator.check_invariants()
+
+
+# ----------------------------------------------------- submit surface -----
+
+def test_submit_rejects_with_error_by_default():
+    """Oversize / empty / max_new<1 submissions are RECORDED (rid returned,
+    Request.error set) instead of raising — the same surface the
+    admission-time guard uses, so a socket handler never sees an
+    exception. strict=True restores the raise for direct use."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, max_len=16, n_slots=1)
+    good = _prompts(cfg, [5])[0]
+    ref = _ref(cfg, params, good, 4)
+
+    r_big = eng.submit(np.arange(14, dtype=np.int32), 10)
+    r_empty = eng.submit(np.array([], np.int32), 4)
+    r_neg = eng.submit(good, 0)
+    r_ok = eng.submit(good, 4)
+    out = eng.run()
+    np.testing.assert_array_equal(out[r_ok], ref)
+    assert eng.n_rejected == 3
+    for rid, frag in ((r_big, "max_len"), (r_empty, "empty"),
+                      (r_neg, "max_new")):
+        req = eng.finished[rid]
+        assert req.error is not None and frag in req.error, req.error
+        assert len(req.tokens) == 0
+    for bad_args in ((np.arange(14, dtype=np.int32), 10),
+                     (np.array([], np.int32), 4), (good, 0)):
+        with pytest.raises(ValueError):
+            eng.submit(*bad_args, strict=True)
+
+
+def test_run_exposes_partials():
+    """A max_steps-bounded run leaves work in flight; partials() surfaces
+    the generated-so-far tokens (greedy => a prefix of the oracle) plus
+    queued requests as empty arrays, instead of silently dropping them."""
+    cfg, params = _setup()
+    p1, p2 = _prompts(cfg, [5, 7], seed=3)
+    ref1 = _ref(cfg, params, p1, 10)
+
+    eng = Engine(cfg, params, max_len=20, n_slots=1)
+    r1 = eng.submit(p1, 10)
+    r2 = eng.submit(p2, 4)                   # stays queued behind r1
+    out = eng.run(max_steps=3)
+    assert r1 not in out and r2 not in out   # finished only
+    part = eng.partials()
+    assert set(part) == {r1, r2}
+    assert 1 <= len(part[r1]) < 10
+    np.testing.assert_array_equal(part[r1], ref1[:len(part[r1])])
+    assert len(part[r2]) == 0
+    eng.run()                                # drains; partials now empty
+    assert eng.partials() == {}
+    np.testing.assert_array_equal(eng.run()[r1], ref1)
+
+
+# ------------------------------------------------ Engine.cancel states ----
+
+def test_cancel_queued_and_decoding():
+    """cancel() retires a never-admitted (queued) request and an in-flight
+    decode; the survivor is untouched, pages are all returned, cancelled
+    requests keep their partial tokens and are excluded from latency
+    percentiles (no garbage TTFT from the 0.0 sentinel)."""
+    from repro.launch.scheduler import latency_stats
+
+    cfg, params = _setup()
+    pa, pb, pc = _prompts(cfg, [5, 9, 7], seed=5)
+    ref_a = _ref(cfg, params, pa, 8)
+    ref_b = _ref(cfg, params, pb, 8)
+
+    eng = Engine(cfg, params, max_len=24, n_slots=2, paged=True, page_size=4)
+    ra = eng.submit(pa, 8)
+    rb = eng.submit(pb, 8)
+    rc = eng.submit(pc, 8)                   # queued: only 2 slots
+    eng.step()
+    assert eng.cancel(rc)                    # queued, never admitted
+    assert len(eng.finished[rc].tokens) == 0
+    eng.step()
+    assert eng.cancel(ra)                    # mid-decode
+    got_a = np.asarray(eng.finished[ra].tokens, np.int32)
+    assert 1 <= len(got_a) < 8
+    np.testing.assert_array_equal(got_a, ref_a[:len(got_a)])
+    assert not eng.cancel(ra)                # already terminal: no-op
+    out = eng.run()
+    np.testing.assert_array_equal(out[rb], ref_b)
+    assert eng.n_cancelled == 2
+    _assert_drained(eng)
+    s = latency_stats(list(eng.finished.values()))
+    assert s["n"] == 1 and s["n_cancelled"] == 2
+    assert s["p50_ttft_s"] >= 0.0            # no 0.0-sentinel garbage
+
+
+def test_cancel_mid_chunking_releases_pages():
+    """cancel() of a slot SUSPENDED mid-prompt (chunked prefill) drops its
+    chunk pages and progress; other in-flight decodes are unaffected and
+    the pool ends empty."""
+    cfg, params = _setup()
+    short = _prompts(cfg, [4], seed=7)[0]
+    longp = _prompts(cfg, [24], seed=8)[0]
+    ref_s = _ref(cfg, params, short, 10)
+
+    eng = Engine(cfg, params, max_len=40, n_slots=2, paged=True, page_size=4,
+                 chunked_prefill=True, prefill_chunk_tokens=4)
+    rs = eng.submit(short, 10)
+    eng.step()                               # short decoding
+    rl = eng.submit(longp, 4)
+    eng.step()                               # long admitted, 1st chunk
+    slot = next(s for s, r in enumerate(eng.slot_req)
+                if r is not None and r.rid == rl)
+    assert eng.slot_chunk_pos[slot] >= 0     # genuinely mid-chunking
+    assert eng.cancel(rl)
+    assert eng.slot_chunk_pos[slot] == -1 and eng.slot_req[slot] is None
+    eng.allocator.check_invariants()
+    out = eng.run()
+    np.testing.assert_array_equal(out[rs], ref_s)
+    assert len(eng.finished[rl].tokens) == 0  # never reached decode
+    _assert_drained(eng)
+
+
+def test_cancel_while_prefix_referenced():
+    """Cancelling the PUBLISHER of shared prefix pages while another
+    request still references them: the pages survive (index + peer refs),
+    the peer completes token-exact, and the end state holds exactly the
+    index's references."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(11)
+    sys_p = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)  # 2 pages
+    pa = np.concatenate([sys_p, rng.integers(0, cfg.vocab_size, 3)]) \
+        .astype(np.int32)
+    pb = np.concatenate([sys_p, rng.integers(0, cfg.vocab_size, 5)]) \
+        .astype(np.int32)
+    ref_b = _ref(cfg, params, pb, 6)
+
+    eng = Engine(cfg, params, max_len=32, n_slots=2, paged=True, page_size=4,
+                 prefix_sharing=True)
+    ra = eng.submit(pa, 12)
+    eng.step()                               # A prefills + publishes
+    rb = eng.submit(pb, 6)
+    eng.step()                               # B admitted via the index
+    assert eng.n_prefix_hits == 1
+    shared = [int(p) for p in eng.page_tbl[0, :2]]
+    assert eng.cancel(ra)                    # publisher goes away
+    for pid in shared:                       # …but the pages must not
+        assert eng.allocator.refcount(pid) >= 2   # index + B still hold
+    eng.allocator.check_invariants()
+    out = eng.run()
+    np.testing.assert_array_equal(out[rb], ref_b)
+    _assert_drained(eng)                     # in_use == index entries
+
+
+# ------------------------------------------------------- AsyncEngine ------
+
+@pytest.mark.parametrize("mode", list(MODES))
+def test_async_stream_parity_all_modes(mode):
+    """submit_stream() yields the exact generate() tokens, live, in every
+    engine mode; shutdown(drain=True) leaves zero leaked pages."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg, [5, 9, 7], seed=13)
+    refs = [_ref(cfg, params, p, 6) for p in prompts]
+
+    eng = Engine(cfg, params, max_len=32, n_slots=2, **MODES[mode])
+    with AsyncEngine(eng) as aeng:
+        streams = [aeng.submit_stream(p, 6) for p in prompts]
+        outs = [list(s) for s in streams]
+    for s, got, want in zip(streams, outs, refs):
+        assert s.status == "finished", (s.status, s.error)
+        np.testing.assert_array_equal(np.asarray(got, np.int32), want)
+        np.testing.assert_array_equal(s.result(), want)
+    _assert_drained(eng)
+
+
+def test_async_cancel_mid_stream():
+    """cancel() from the consumer thread ends the stream with its partial
+    (greedy-prefix-exact) tokens; the other in-flight request and the
+    allocator are unaffected."""
+    cfg, params = _setup()
+    pa, pb = _prompts(cfg, [5, 9], seed=17)
+    ref_a, ref_b = _ref(cfg, params, pa, 26), _ref(cfg, params, pb, 6)
+
+    eng = Engine(cfg, params, max_len=32, n_slots=2, paged=True, page_size=4)
+    # throttled steps: the cancel must land before sa's 26 tokens complete
+    # even if this (consumer) thread gets descheduled after token 2
+    with AsyncEngine(eng,
+                     step_cb=lambda _e: time.sleep(0.005)) as aeng:
+        sa = aeng.submit_stream(pa, 26)
+        sb = aeng.submit_stream(pb, 6)
+        it = iter(sa)
+        got = [next(it), next(it)]
+        aeng.cancel(sa.rid)
+        got += list(it)                      # drains to the terminal mark
+        np.testing.assert_array_equal(sb.result(timeout=60), ref_b)
+    assert sa.status == "cancelled" and 2 <= len(got) < 26
+    np.testing.assert_array_equal(np.asarray(got, np.int32),
+                                  ref_a[:len(got)])
+    _assert_drained(eng)
+
+
+def test_async_backpressure_rejects_when_full():
+    """Past max_pending live requests, submit_stream returns a stream
+    already ended status="rejected" (reject-with-error, no exception);
+    capacity frees as requests finish."""
+    cfg, params = _setup()
+    pa, pb, pc = _prompts(cfg, [5, 7, 6], seed=19)
+    ref_a = _ref(cfg, params, pa, 12)
+
+    eng = Engine(cfg, params, max_len=24, n_slots=1)
+    with AsyncEngine(eng, max_pending=2) as aeng:
+        sa = aeng.submit_stream(pa, 12)
+        sb = aeng.submit_stream(pb, 4)
+        sc = aeng.submit_stream(pc, 4)       # third live: over capacity
+        assert sc.status == "rejected" and "capacity" in sc.error
+        assert list(sc) == [] and len(sc.result()) == 0
+        np.testing.assert_array_equal(sa.result(timeout=60), ref_a)
+        sb.result(timeout=60)
+        sd = aeng.submit_stream(pc, 4)       # capacity freed: accepted
+        assert sd.result(timeout=60).shape == (4,)
+    assert eng.n_rejected == 1
+
+
+def test_async_oversize_submit_streams_rejection():
+    """An unservable submission surfaces on the STREAM (status rejected,
+    error set) — the host loop and socket handlers never see a raise."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, max_len=16, n_slots=1)
+    with AsyncEngine(eng) as aeng:
+        s = aeng.submit_stream(np.arange(14, dtype=np.int32), 10)
+        assert s.status == "rejected" and "max_len" in s.error
+        assert list(s) == []
+        # overload/reject records never pile up engine- or wrapper-side
+        assert s.rid not in eng.finished and aeng._early_end == {}
+        # a DIRECT submit on the wrapped engine (no stream) must not
+        # stash an early-end entry either — only engine.finished owns it
+        rid = eng.submit(np.arange(3, dtype=np.int32), 2)
+        deadline = time.monotonic() + 60
+        while rid not in eng.finished and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert len(eng.finished[rid].tokens) == 2
+        assert aeng._early_end == {}
+
+
+def test_async_shutdown_abort_cancels_live():
+    """shutdown(drain=False) cancels everything still live: streams end
+    terminally, pages are returned, nothing leaks."""
+    cfg, params = _setup()
+    pa, pb = _prompts(cfg, [5, 9], seed=23)
+
+    eng = Engine(cfg, params, max_len=40, n_slots=2, paged=True, page_size=4)
+    aeng = AsyncEngine(eng)
+    sa = aeng.submit_stream(pa, 30)
+    sb = aeng.submit_stream(pb, 30)
+    it = iter(sa)
+    next(it)                                 # ensure work actually started
+    aeng.shutdown(drain=False)
+    for s in (sa, sb):
+        assert s.done and s.status in ("cancelled", "aborted"), s.status
+    _assert_drained(eng)
+    with pytest.raises(RuntimeError):
+        aeng.submit_stream(pa, 4)            # closed for business
+
+
+def test_async_step_exception_surfaces():
+    """A step-loop exception does not vanish: live requests are cancelled
+    (no leaked pages), streams end, and shutdown() re-raises."""
+    cfg, params = _setup()
+    p = _prompts(cfg, [5], seed=29)[0]
+
+    eng = Engine(cfg, params, max_len=24, n_slots=1, paged=True, page_size=4)
+    boom = RuntimeError("injected step failure")
+
+    def bad_step_cb(e):
+        raise boom
+
+    aeng = AsyncEngine(eng, step_cb=bad_step_cb)
+    s = aeng.submit_stream(p, 8)
+    s.result(timeout=60)                     # stream still ends terminally
+    assert s.status in ("cancelled", "aborted"), s.status
+    with pytest.raises(RuntimeError):
+        aeng.shutdown()
+    _assert_drained(eng)
+
+
+def test_async_concurrent_submitters():
+    """Many client threads submitting concurrently against a small engine:
+    every stream completes token-exact (locked rid allocation + single-
+    consumer queue keep the scheduler coherent under contention)."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg, [4, 5, 6, 7, 8, 9], seed=31)
+    refs = [_ref(cfg, params, p, 5) for p in prompts]
+
+    eng = Engine(cfg, params, max_len=16, n_slots=2, paged=True, page_size=4)
+    streams = [None] * len(prompts)
+    with AsyncEngine(eng) as aeng:
+        def worker(i):
+            streams[i] = aeng.submit_stream(prompts[i], 5)
+            streams[i].result(timeout=120)
+
+        ts = [threading.Thread(target=worker, args=(i,))
+              for i in range(len(prompts))]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(120)
+    for s, want in zip(streams, refs):
+        assert s is not None and s.status == "finished"
+        np.testing.assert_array_equal(s.result(), want)
+    _assert_drained(eng)
+
+
+# ------------------------------------------------------- TCP frontend -----
+
+def _start_server(eng, **kw):
+    from repro.launch.server import NBLServer
+    aeng = AsyncEngine(eng, **kw)
+    srv = NBLServer(aeng, port=0)
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    return srv
+
+
+class _Conn:
+    def __init__(self, port):
+        self.sock = socket.create_connection(("127.0.0.1", port),
+                                             timeout=120)
+        self.reader = self.sock.makefile("r", encoding="utf-8")
+
+    def send(self, obj):
+        self.sock.sendall((json.dumps(obj) + "\n").encode())
+
+    def recv(self):
+        return json.loads(self.reader.readline())
+
+    def close(self):
+        # the makefile wrapper holds its own reference to the underlying
+        # socket — FIN is only sent once BOTH are closed
+        self.reader.close()
+        self.sock.close()
+
+
+def test_server_loopback_stream_cancel_stats():
+    """Protocol end-to-end on a loopback socket: interleaved streams,
+    mid-stream cancel, stats, ping, malformed-line tolerance — survivors
+    token-exact, zero pages leaked."""
+    cfg, params = _setup()
+    pa, pb = _prompts(cfg, [5, 9], seed=37)
+    ref_a = _ref(cfg, params, pa, 6)
+    ref_b = _ref(cfg, params, pb, 24)
+
+    eng = Engine(cfg, params, max_len=40, n_slots=2, paged=True, page_size=4)
+    # throttled steps: the mid-stream cancel below must win its race with
+    # the victim's completion even when this process gets descheduled
+    srv = _start_server(eng, step_cb=lambda _e: time.sleep(0.01))
+    c = _Conn(srv.port)
+    try:
+        c.send({"op": "ping"})
+        assert c.recv()["event"] == "pong"
+        c.sock.sendall(b"this is not json\n")
+        assert c.recv()["event"] == "error"
+
+        c.send({"op": "submit", "prompt": [int(t) for t in pa],
+                "max_new": 6, "tag": "a"})
+        c.send({"op": "submit", "prompt": [int(t) for t in pb],
+                "max_new": 24, "tag": "b"})
+        rids, toks, done = {}, {}, {}
+        while len(done) < 2:
+            ev = c.recv()
+            if ev["event"] == "submitted":
+                rids[ev["tag"]] = ev["rid"]
+                toks[ev["rid"]] = []
+            elif ev["event"] == "token":
+                toks[ev["rid"]].append(ev["token"])
+                assert ev["index"] == len(toks[ev["rid"]]) - 1
+                if ev["rid"] == rids.get("b") and ev["index"] == 1:
+                    c.send({"op": "cancel", "rid": rids["b"]})
+            elif ev["event"] == "done":
+                done[ev["rid"]] = ev
+        a, b = done[rids["a"]], done[rids["b"]]
+        assert a["status"] == "finished"
+        np.testing.assert_array_equal(np.asarray(a["tokens"]), ref_a)
+        assert b["status"] == "cancelled"
+        np.testing.assert_array_equal(np.asarray(b["tokens"]),
+                                      ref_b[:len(b["tokens"])])
+        # streamed tokens match the final arrays (live feed == result)
+        np.testing.assert_array_equal(toks[rids["a"]], a["tokens"])
+        c.send({"op": "stats"})
+        st = c.recv()["stats"]
+        assert st["pages_in_use"] == 0 and st["n_cancelled"] == 1
+    finally:
+        c.close()
+        srv.shutdown(drain=True)
+    _assert_drained(eng)
+
+
+def test_server_rejection_is_an_event_not_a_crash():
+    """An oversize submit comes back as a done/rejected EVENT; the
+    connection (and the host loop) survive and serve the next request."""
+    cfg, params = _setup()
+    good = _prompts(cfg, [5], seed=41)[0]
+    ref = _ref(cfg, params, good, 4)
+
+    eng = Engine(cfg, params, max_len=16, n_slots=1)
+    srv = _start_server(eng)
+    c = _Conn(srv.port)
+    try:
+        c.send({"op": "submit", "prompt": list(range(14)), "max_new": 10})
+        assert c.recv()["event"] == "submitted"
+        ev = c.recv()
+        assert ev["event"] == "done" and ev["status"] == "rejected"
+        assert "max_len" in ev["error"]
+        c.send({"op": "submit", "prompt": [int(t) for t in good],
+                "max_new": 4})
+        assert c.recv()["event"] == "submitted"
+        evs = []
+        while not evs or evs[-1]["event"] != "done":
+            evs.append(c.recv())
+        np.testing.assert_array_equal(np.asarray(evs[-1]["tokens"]), ref)
+    finally:
+        c.close()
+        srv.shutdown(drain=True)
+
+
+def test_async_no_retain_results_bounds_memory():
+    """retain_results=False drops each terminal request from
+    engine.finished once its stream carries the result — the long-running
+    server's memory knob; streams still deliver exact tokens."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg, [5, 9], seed=47)
+    refs = [_ref(cfg, params, p, 5) for p in prompts]
+
+    eng = Engine(cfg, params, max_len=16, n_slots=2)
+    with AsyncEngine(eng, retain_results=False) as aeng:
+        streams = [aeng.submit_stream(p, 5) for p in prompts]
+        # the REJECT path must not linger either (it is the overload path
+        # backpressure exists for): oversize submit-time rejection
+        sr = aeng.submit_stream(np.arange(14, dtype=np.int32), 10)
+        assert sr.status == "rejected"
+        for s, want in zip(streams, refs):
+            np.testing.assert_array_equal(s.result(timeout=60), want)
+    assert eng.finished == {}                # nothing retained, rejects incl.
+    assert len(aeng._streams) == 0           # terminal streams dropped too
+
+
+def test_server_cancel_scoped_to_connection():
+    """One client cannot cancel another's request: a foreign rid gets an
+    error event and the victim's generation completes untouched."""
+    cfg, params = _setup()
+    p = _prompts(cfg, [5], seed=53)[0]
+    ref = _ref(cfg, params, p, 10)
+
+    eng = Engine(cfg, params, max_len=16, n_slots=1)
+    srv = _start_server(eng)
+    a, b = _Conn(srv.port), _Conn(srv.port)
+    try:
+        a.send({"op": "submit", "prompt": [int(t) for t in p],
+                "max_new": 10})
+        rid = a.recv()["rid"]
+        b.send({"op": "cancel", "rid": rid})     # foreign rid
+        ev = b.recv()
+        assert ev["event"] == "error" and "per-connection" in ev["error"]
+        evs = []
+        while not evs or evs[-1]["event"] != "done":
+            evs.append(a.recv())
+        assert evs[-1]["status"] == "finished"
+        np.testing.assert_array_equal(np.asarray(evs[-1]["tokens"]), ref)
+    finally:
+        a.close()
+        b.close()
+        srv.shutdown(drain=True)
+
+
+def test_server_submit_after_shutdown_is_an_error_event():
+    """A submit that can no longer be served (engine host loop stopped)
+    comes back as an "error" EVENT on the still-open connection — the
+    protocol's no-dropped-connections promise holds even past shutdown."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, max_len=16, n_slots=1)
+    srv = _start_server(eng)
+    c = _Conn(srv.port)
+    try:
+        c.send({"op": "ping"})               # handshake: the connection
+        assert c.recv()["event"] == "pong"   # must be ACCEPTED before the
+        srv.shutdown(drain=True)             # listener closes, or it dies
+        c.send({"op": "submit", "prompt": [1, 2, 3], "max_new": 2})
+        ev = c.recv()
+        assert ev["event"] == "error" and "submit failed" in ev["error"]
+        c.send({"op": "ping"})               # connection still serviceable
+        assert c.recv()["event"] == "pong"
+    finally:
+        c.close()
+
+
+def test_server_disconnect_cancels_inflight():
+    """A client that vanishes mid-stream must not leak its pages: the
+    connection teardown cancels its in-flight request (the refcounted-
+    prefix leak the async PR exists to close)."""
+    cfg, params = _setup()
+    p = _prompts(cfg, [9], seed=43)[0]
+
+    eng = Engine(cfg, params, max_len=40, n_slots=2, paged=True, page_size=4,
+                 prefix_sharing=True)
+    srv = _start_server(eng)
+    c = _Conn(srv.port)
+    c.send({"op": "submit", "prompt": [int(t) for t in p], "max_new": 28})
+    assert c.recv()["event"] == "submitted"
+    assert c.recv()["event"] == "token"      # generation running
+    c.close()                                # vanish mid-stream
+    deadline = time.monotonic() + 60
+    while time.monotonic() < deadline:
+        if eng.n_cancelled == 1 and not eng.has_work:
+            break
+        time.sleep(0.01)
+    assert eng.n_cancelled == 1
+    srv.shutdown(drain=True)
+    _assert_drained(eng)                     # index refs only, no slot refs

@@ -283,9 +283,14 @@ def test_direct_scheduler_submit_overflow_rejected(paged):
     assert len(bad.tokens) == 0
     s = latency_stats(list(eng.finished.values()))
     assert s["n"] == 1 and s["n_rejected"] == 1  # percentiles exclude it
-    # Engine.submit still rejects eagerly
+    # Engine.submit shares the same reject-with-error surface (PR 5): the
+    # oversize submission is RECORDED with a rid instead of raising, so a
+    # serving host loop never dies on it; strict=True keeps the raise.
+    rid_eager = eng.submit(big, 10)
+    assert eng.finished[rid_eager].error is not None
+    assert eng.n_rejected == 2
     with pytest.raises(ValueError):
-        eng.submit(big, 10)
+        eng.submit(big, 10, strict=True)
 
 
 def test_scheduler_fifo_and_prefill_cap():

@@ -2,17 +2,21 @@
 Engine in all four serving modes (ring / paged / prefix-shared / chunked)
 plus the chunked+shared composition, asserting TOKEN-EXACT parity against
 the single-request generate() oracle and allocator/refcount invariants
-after every step.
+after every step. An ASYNC variant replays the same workloads through the
+AsyncEngine host loop — concurrent submit/stream/cancel from worker
+threads (cancel mid-chunking and cancel-while-prefix-referenced fall out
+of the seeded cancel offsets), with the same per-step invariants hung on
+the step thread via step_cb.
 
 Workloads are drawn from a seeded numpy RNG, so every example is
 deterministic and replayable from its (mode, seed) pair alone: prompt
 lengths, shared-prefix structure, max_new, EOS, submission schedule (some
 requests join mid-stream), slot counts, page-pool pressure (pools shrunk to
 force preemption) and chunk sizes all vary. The deterministic suite runs
-``NBL_FUZZ_EXAMPLES`` seeds per mode (default 3; CI raises it to 50 for
-200 examples across the four modes); the hypothesis property on top draws
-arbitrary seeds and shrinks failures, and skips cleanly when hypothesis is
-absent (tests/_hypothesis_compat.py).
+``NBL_FUZZ_EXAMPLES`` seeds per mode and variant (default 3; CI raises it
+to 50 for 50 x 5 modes x {sync, async} = 500 examples); the hypothesis
+property on top draws arbitrary seeds and shrinks failures, and skips
+cleanly when hypothesis is absent (tests/_hypothesis_compat.py).
 
 Engines share jitted step functions through launch.engine's module cache,
 so the marginal example costs host-loop time, not recompilation.
@@ -21,6 +25,8 @@ from __future__ import annotations
 
 import functools
 import os
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +36,7 @@ import pytest
 from tests._hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
-from repro.launch.engine import Engine
+from repro.launch.engine import AsyncEngine, Engine
 from repro.launch.serve import generate
 from repro.models import decode_step, init_params, prefill
 from repro.models.paging import PageAllocator, pages_per_seq
@@ -179,6 +185,80 @@ def _replay(mode: str, seed: int) -> None:
         eng.allocator.check_invariants()
 
 
+def _replay_async(mode: str, seed: int) -> None:
+    """Async-mode replay of the same seeded workload: worker threads
+    submit/stream/cancel concurrently against the AsyncEngine host loop,
+    allocator/refcount/page-table invariants are checked after EVERY step
+    (step_cb runs on the step thread), and terminal results are oracled —
+    completed requests token-exact, cancelled ones a greedy-exact PREFIX
+    with their pages (incl. shared-prefix pins) all returned. Cancels are
+    seeded at random token offsets, so chunked workloads get cancelled
+    mid-chunking and shared workloads while their pages are referenced."""
+    w = _draw_workload(seed)
+    cfg, params = _setup(w["arch"])
+    kw = dict(MODES[mode])
+    if kw.get("chunked_prefill"):
+        kw["prefill_chunk_tokens"] = w["chunk_tokens"]
+    eng = Engine(cfg, params, max_len=MAX_LEN, n_slots=w["n_slots"],
+                 eos_id=w["eos_id"], **kw)
+    if eng.paged:
+        eng.allocator = PageAllocator(w["n_pages"])
+        eng.n_pages = w["n_pages"]
+    aeng = AsyncEngine(eng, step_cb=_check_invariants)
+
+    rng = np.random.default_rng(seed + 977)
+    n = len(w["reqs"])
+    cancel_after = [int(rng.integers(0, 4)) if rng.random() < 0.4 else None
+                    for _ in range(n)]
+    streams: list = [None] * n
+    errs: list = []
+    _done = object()
+
+    def worker(i, prompt, max_new, delay):
+        try:
+            time.sleep(delay * 0.003)
+            s = aeng.submit_stream(prompt, max_new)
+            streams[i] = s
+            it = iter(s)
+            if cancel_after[i] is not None:
+                for _ in range(cancel_after[i]):
+                    if next(it, _done) is _done:
+                        break
+                aeng.cancel(s.rid)
+            for _ in it:                     # consume the live feed
+                pass
+        except BaseException as e:           # surfaced after join
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i, p, mn, d))
+               for i, (p, mn, d) in enumerate(w["reqs"])]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(120)
+    aeng.shutdown(drain=True, timeout=120)
+    assert not errs, errs
+
+    for i, (prompt, max_new, _) in enumerate(w["reqs"]):
+        s = streams[i]
+        assert s is not None and s.done, (mode, seed, i)
+        want = _oracle(cfg, params, prompt, max_new, w["eos_id"])
+        got = np.asarray(s.tokens, np.int32)
+        ctx = f"mode={mode} seed={seed} req={i} (arch={w['arch']})"
+        if eng.finished[s.rid].cancelled:
+            assert s.status == "cancelled", (ctx, s.status)
+            np.testing.assert_array_equal(got, want[:len(got)],
+                                          err_msg=ctx)
+        else:
+            assert s.status == "finished", (ctx, s.status, s.error)
+            np.testing.assert_array_equal(got, want, err_msg=ctx)
+
+    if eng.paged:
+        held = eng.prefix_index.n_entries if eng.prefix_sharing else 0
+        assert eng.allocator.in_use == held, (eng.allocator.in_use, held)
+        eng.allocator.check_invariants()
+
+
 N_EXAMPLES = int(os.environ.get("NBL_FUZZ_EXAMPLES", "3"))
 
 
@@ -188,6 +268,16 @@ def test_serving_oracle_fuzz(mode, seed):
     """Deterministic fuzz sweep: NBL_FUZZ_EXAMPLES seeds x 5 engine modes
     (CI runs 50 x 5 = 250 examples)."""
     _replay(mode, seed)
+
+
+@pytest.mark.parametrize("mode", list(MODES))
+@pytest.mark.parametrize("seed", range(N_EXAMPLES))
+def test_async_serving_fuzz(mode, seed):
+    """Async host-loop fuzz: the same seeded workloads submitted from
+    concurrent worker threads with streamed consumption and seeded
+    mid-stream cancellation, per-step invariants, oracle parity for the
+    survivors and prefix parity for the cancelled."""
+    _replay_async(mode, seed)
 
 
 @settings(max_examples=10, deadline=None)
