@@ -549,7 +549,16 @@ def bench_async(fast: bool) -> None:
     pass asserts token-exact generate() parity on the streamed tokens and
     a zero-leak pool after shutdown; linearized layers carry no page pool,
     so admitted concurrency is monotone in m at equal budget and the queue
-    drains wider."""
+    drains wider.
+
+    Runs with the observability registry ATTACHED: the artifact's token
+    count is the registry's ``nbl_tokens_emitted_total`` (cross-validated
+    against the hand count from the streams every pass), and at m=0 the
+    scenario asserts the two obs acceptance bounds — streamed tok/s with
+    the registry enabled within 3% of disabled (per-metric minima over
+    TIMED_REPEATS on BOTH sides), and zero extra device dispatches on the
+    step path (obs on/off produce identical deterministic sweep counts on
+    a sync engine replay)."""
     import threading
 
     from repro.configs import get_config
@@ -558,6 +567,7 @@ def bench_async(fast: bool) -> None:
     from repro.launch.serve import generate
     from repro.models import init_params
     from repro.models.kv_cache import cache_bytes
+    from repro.obs import Observability
 
     cfg = get_config("tiny-dense")
     max_len, page_size = 64, 8
@@ -578,10 +588,12 @@ def bench_async(fast: bool) -> None:
         refs = [np.asarray(generate(c, params, jnp.asarray(p)[None],
                                     max_new=max_new))[0] for p in prompts]
 
-        def run_once():
+        def run_once(with_obs: bool = True):
+            obs = Observability() if with_obs else None
             eng = Engine(c, params, max_len=max_len,
                          cache_budget_bytes=budget, paged=True,
-                         page_size=page_size, expected_len=expected)
+                         page_size=page_size, expected_len=expected,
+                         obs=obs)
             aeng = AsyncEngine(eng, max_pending=2 * n_req)
             streams = [None] * n_req
             t0 = time.perf_counter()
@@ -606,28 +618,67 @@ def bench_async(fast: bool) -> None:
                 np.testing.assert_array_equal(got, want)  # streamed == ref
                 ntok += len(got)
             assert eng.allocator.in_use == 0   # zero leaked pages
+            if obs is not None:
+                # the artifact's token count is the REGISTRY's view; the
+                # hand count from the streams only cross-validates it
+                assert obs.tokens.value == ntok, (obs.tokens.value, ntok)
+                assert obs.finished.value == n_req
             qd = np.array([eng.finished[s.rid].t_admit
                            - eng.finished[s.rid].t_submit for s in streams])
-            return eng.n_slots, dt, ntok, qd
+            return eng, obs, dt, ntok, qd
 
         run_once()                             # warmup: compile jits
         n_slots, dts, p50s, p99s, ntok = None, [], [], [], 0
         for _ in range(TIMED_REPEATS):         # per-metric min (see top)
-            n_slots, dt, ntok, qd = run_once()
+            eng, obs, dt, ntok, qd = run_once()
+            n_slots = eng.n_slots
             dts.append(dt)
             p50s.append(float(np.percentile(qd, 50)))
             p99s.append(float(np.percentile(qd, 99)))
         slots_by_m.append(n_slots)
         emit(f"async/nbl-{m}/concurrency", n_slots, "equal_budget")
         emit(f"async/nbl-{m}/streamed_tokens_per_s",
-             round(ntok / min(dts), 1))
+             round(ntok / min(dts), 1), "registry")
         emit(f"async/nbl-{m}/p50_queue_delay_ms",
              round(min(p50s) * 1e3, 2))
         emit(f"async/nbl-{m}/p99_queue_delay_ms",
              round(min(p99s) * 1e3, 2))
+        if m == 0:
+            rate_on = ntok / min(dts)
+            # overhead guard: same workload with obs=None, per-metric min
+            off_dts = []
+            for _ in range(TIMED_REPEATS):
+                _, _, dt, ntok_off, _ = run_once(with_obs=False)
+                off_dts.append(dt)
+            assert ntok_off == ntok, (ntok_off, ntok)   # same tokens served
+            rate_off = ntok_off / min(off_dts)
+            over_pct = (rate_off - rate_on) / rate_off * 100.0
+            assert rate_on >= 0.97 * rate_off, (rate_on, rate_off)
+            emit("async/obs_overhead_pct", round(over_pct, 2), "assert_le_3")
+            # dispatch guard: every obs hook is host-side, so a DETERMINISTIC
+            # sync replay must do identical device work with obs on vs off —
+            # sweep counts, prefill counts/tokens, and the tokens themselves
+            sweep = {}
+            for on in (True, False):
+                o = Observability() if on else None
+                e = Engine(c, params, max_len=max_len,
+                           cache_budget_bytes=budget, paged=True,
+                           page_size=page_size, expected_len=expected, obs=o)
+                rids = [e.submit(p, max_new) for p in prompts]
+                out = e.run()
+                sweep[on] = (e.n_decode_steps, e.n_prefills,
+                             e.n_prefill_tokens,
+                             tuple(tuple(out[r]) for r in rids))
+                if o is not None:
+                    assert o.decode_steps.value == e.n_decode_steps
+                    assert o.prefills.value == e.n_prefills
+            assert sweep[True] == sweep[False], "obs changed device work"
+            emit("async/obs_zero_extra_dispatches", 1, "assert")
     # structural claims (parity + zero-leak asserted inside every pass)
     assert slots_by_m == sorted(slots_by_m), slots_by_m
     emit("async/concurrency_monotone_in_m", 1, "assert")
+    # the scenario artifact carries the last pass's full registry snapshot
+    return {"registry": obs.snapshot()}
 
 
 # ---------------------------------------------------------------------------
@@ -753,16 +804,42 @@ BENCHES = {
 }
 
 
-def write_scenario_artifact(name: str, rows: list) -> str:
+def _provenance() -> dict:
+    """Where this artifact came from: git SHA (best-effort — "unknown"
+    outside a checkout), UTC timestamp, and the repeat count every timed
+    metric was minimized over."""
+    import datetime
+    import subprocess
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        sha = "unknown"
+    ts = datetime.datetime.now(datetime.timezone.utc)
+    return {"git_sha": sha,
+            "timestamp_utc": ts.isoformat(timespec="seconds"),
+            "timed_repeats": TIMED_REPEATS}
+
+
+def write_scenario_artifact(name: str, rows: list, extra: dict = None) -> str:
     """One stable JSON artifact per scenario under benchmarks/out/ — a
     sorted rows list with a fixed schema, so successive PRs can diff the
-    same file path for trajectory tracking."""
+    same file path for trajectory tracking. Schema v2 adds provenance
+    (git SHA, timestamp, repeats) and lets a scenario attach extra
+    derived views (e.g. the observability registry snapshot)."""
     outdir = os.path.join(os.path.dirname(__file__), "out")
     os.makedirs(outdir, exist_ok=True)
     path = os.path.join(outdir, f"{name}.json")
-    payload = {"scenario": name,
+    payload = {"schema_version": 2,
+               "scenario": name,
+               "provenance": _provenance(),
                "rows": sorted(({"name": n, "value": v, "derived": d}
                                for n, v, d in rows), key=lambda r: r["name"])}
+    for k, v in (extra or {}).items():
+        payload.setdefault(k, v)
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
         f.write("\n")
@@ -778,8 +855,8 @@ def main() -> None:
     print("name,value,derived")
     for name in names:
         start = len(ROWS)
-        BENCHES[name](args.fast)
-        write_scenario_artifact(name, ROWS[start:])
+        extra = BENCHES[name](args.fast)
+        write_scenario_artifact(name, ROWS[start:], extra)
     out = os.path.join(os.path.dirname(__file__), "out.json")
     with open(out, "w") as f:
         json.dump([{"name": n, "value": v, "derived": d}

@@ -7,9 +7,14 @@ mid-stream. Usable as a CLI demo against a running server::
     PYTHONPATH=src python -m repro.launch.server --port 0 &   # prints port
     python examples/stream_client.py --port <port> --n 3 --cancel-first 2
 
-or as a library (the CI async smoke imports ``Client`` from this file).
-No repro imports — the client needs only the stdlib, like a real remote
-caller would.
+``--watch`` instead polls the server's ``metrics`` op and renders a
+one-line live ticker (tok/s, queue depth, free pages, prefix hit-rate)
+from the observability registry — run it in a second terminal while
+traffic flows.
+
+Also usable as a library (the CI async smoke imports ``Client`` from this
+file). No repro imports — the client needs only the stdlib, like a real
+remote caller would.
 """
 from __future__ import annotations
 
@@ -17,6 +22,8 @@ import argparse
 import json
 import random
 import socket
+import sys
+import time
 from collections import deque
 from typing import Optional
 
@@ -78,6 +85,13 @@ class Client:
         self.send({"op": "stats"})
         return self._wait_for("stats")["stats"]
 
+    def metrics(self) -> dict:
+        """One observability scrape: {"enabled", "metrics" (registry
+        snapshot), "prometheus" (text exposition)}."""
+        self.send({"op": "metrics"})
+        ev = self._wait_for("metrics")
+        return {k: v for k, v in ev.items() if k != "event"}
+
     def shutdown(self) -> None:
         """Ask the server to drain and exit."""
         self.send({"op": "shutdown"})
@@ -93,6 +107,40 @@ class Client:
             pass
 
 
+def watch(cli: "Client", interval: float, n_polls: Optional[int],
+          out=sys.stdout) -> int:
+    """Live metrics ticker: polls the ``metrics`` op every ``interval``
+    seconds and renders one line per poll — streamed tok/s (token-counter
+    delta over the poll gap), queue depth, active slots, free pages and
+    the prefix hit-rate (hits / admissions). Runs ``n_polls`` times (None
+    = until interrupted); returns the number of polls rendered."""
+    prev_tok, prev_t, polls = None, None, 0
+    while n_polls is None or polls < n_polls:
+        m = cli.metrics()
+        now = time.monotonic()
+        if not m.get("enabled"):
+            print("metrics disabled on this server (--no-obs)", file=out)
+            return polls
+        snap = m["metrics"]
+        c, g = snap["counters"], snap["gauges"]
+        tok = c.get("nbl_tokens_emitted_total", 0)
+        rate = ((tok - prev_tok) / (now - prev_t)
+                if prev_t is not None and now > prev_t else 0.0)
+        hits = c.get("nbl_prefix_hits_total", 0)
+        admitted = c.get("nbl_requests_admitted_total", 0)
+        hit_rate = f"{hits / admitted:.0%}" if admitted else "-"
+        print(f"[{snap['labels'].get('engine_mode', '?')}] "
+              f"{rate:8.1f} tok/s | queue {g.get('nbl_queue_depth', 0):3d}"
+              f" | active {g.get('nbl_slots_active', 0):3d}"
+              f" | free pages {g.get('nbl_pages_free', 0):4d}"
+              f" | prefix hit {hit_rate}", file=out, flush=True)
+        prev_tok, prev_t = tok, now
+        polls += 1
+        if n_polls is None or polls < n_polls:
+            time.sleep(interval)
+    return polls
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--host", default="127.0.0.1")
@@ -105,10 +153,25 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--cancel-first", type=int, default=None, metavar="K",
                     help="cancel the first request after K streamed tokens")
+    ap.add_argument("--watch", action="store_true",
+                    help="poll the metrics op and render a one-line live "
+                         "ticker instead of submitting requests")
+    ap.add_argument("--watch-interval", type=float, default=1.0,
+                    help="seconds between --watch polls")
+    ap.add_argument("--watch-n", type=int, default=None, metavar="N",
+                    help="stop --watch after N polls (default: forever)")
     args = ap.parse_args()
 
     rng = random.Random(args.seed)
     cli = Client(args.host, args.port)
+    if args.watch:
+        try:
+            watch(cli, args.watch_interval, args.watch_n)
+        except KeyboardInterrupt:
+            pass
+        finally:
+            cli.close()
+        return
     rids = [cli.submit([rng.randrange(args.vocab)
                         for _ in range(args.prompt_len)],
                        args.max_new, tag=i) for i in range(args.n)]

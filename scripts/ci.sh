@@ -18,8 +18,17 @@
 #      free port, 3 overlapping requests are streamed through the
 #      examples/stream_client.py Client, one is cancelled mid-stream —
 #      survivors exact-match generate(), the victim's partial tokens are a
-#      greedy-exact prefix, and the page pool ends with ZERO leaked pages;
-#      then the async_throughput benchmark scenario under --fast
+#      greedy-exact prefix, and the page pool ends with ZERO leaked pages.
+#      The server runs with observability on (the default): the metrics
+#      op is scraped MID-STREAM, the Prometheus exposition is parsed
+#      line-by-line and key series are asserted non-zero. Then the
+#      async_throughput benchmark scenario under --fast — which itself
+#      asserts the obs overhead guard (registry-enabled streamed tok/s
+#      within 3% of disabled + zero extra device dispatches at m=0).
+#   7. lint: raw time.perf_counter() call sites are confined to
+#      src/repro/obs/ (engine code uses the monotonic lifecycle clock;
+#      benchmarks/examples are pinned at their baseline count so new
+#      timing code goes through repro.obs.clock)
 #
 #   bash scripts/ci.sh
 set -euo pipefail
@@ -222,15 +231,39 @@ try:
             for i, (p, mn) in enumerate(zip(prompts, new))]
     victim = rids[2]
     tokens = {r: [] for r in rids}; done = {}
+    scrape = None
     for ev in cli.events():
         if ev["event"] == "token":
             tokens[ev["rid"]].append(ev["token"])
+            if scrape is None and sum(map(len, tokens.values())) == 3:
+                scrape = cli.metrics()       # obs scrape MID-STREAM
             if ev["rid"] == victim and len(tokens[victim]) == 2:
                 cli.cancel(victim)           # mid-stream, from the client
         elif ev["event"] == "done":
             done[ev["rid"]] = ev
             if len(done) == 3:
                 break
+
+    # --- observability surface: mid-stream scrape is live + consistent
+    import re
+    assert scrape is not None and scrape["enabled"], scrape
+    snap = scrape["metrics"]
+    assert snap["labels"]["engine_mode"] == "paged", snap["labels"]
+    assert snap["counters"]["nbl_requests_submitted_total"] == 3
+    assert snap["counters"]["nbl_tokens_emitted_total"] >= 3
+    assert snap["counters"]["nbl_decode_steps_total"] >= 1
+    assert snap["last_step"]["n_decoding"] >= 1   # caught it mid-flight
+    text = scrape["prometheus"]
+    sample = re.compile(r'^[A-Za-z_:][A-Za-z0-9_:]*(\{[^}]*\})? '
+                        r'[-+0-9.einfEINF]+$')
+    lines = [l for l in text.splitlines() if l and not l.startswith("#")]
+    assert lines and all(sample.match(l) for l in lines), lines[:5]
+    nz = {l.split("{")[0] for l in lines
+          if float(l.rsplit(" ", 1)[1]) > 0}
+    for key in ("nbl_requests_submitted_total", "nbl_tokens_emitted_total",
+                "nbl_decode_steps_total", "nbl_prefills_total",
+                "nbl_ttft_seconds_count", "nbl_pages_in_use"):
+        assert any(s.startswith(key) for s in nz), (key, sorted(nz))
     for i in range(2):                       # survivors: exact parity
         assert done[rids[i]]["status"] == "finished", done[rids[i]]
         np.testing.assert_array_equal(np.asarray(done[rids[i]]["tokens"]),
@@ -253,7 +286,26 @@ finally:
         proc.kill()
 EOF
 
-echo "== async_throughput scenario (--fast) =="
+echo "== async_throughput scenario (--fast, incl. obs overhead guard) =="
 python -m benchmarks.run --fast --only async_throughput > /dev/null
 test -s benchmarks/out/async_throughput.json
+
+echo "== lint: raw time.perf_counter() confined to obs/ =="
+# engine/runtime code must use the Request lifecycle clock (monotonic) or
+# go through repro.obs.clock — obs/ is the only sanctioned owner in src/
+hits=$(grep -rn "time\.perf_counter()" src/ | grep -v "src/repro/obs/" || true)
+if [ -n "$hits" ]; then
+  echo "raw time.perf_counter() outside src/repro/obs/:"; echo "$hits"
+  exit 1
+fi
+# benchmarks/examples keep their pre-obs call sites; NEW timing code there
+# should import repro.obs.clock instead of minting more raw sites
+count=$(grep -rn "time\.perf_counter()" benchmarks/ examples/ | wc -l)
+if [ "$count" -gt 16 ]; then
+  echo "time.perf_counter() call sites in benchmarks/+examples/ grew to" \
+       "$count (baseline 16) — use repro.obs.clock for new timing code"
+  grep -rn "time\.perf_counter()" benchmarks/ examples/
+  exit 1
+fi
+echo "perf_counter lint OK ($count baseline sites outside src/)"
 echo "CI OK"

@@ -105,6 +105,14 @@ Architecture (frontend → scheduler → engine → cache):
                                 SSM and cross-attn — the Engine
                                 constructor raises before the host loop
                                 ever starts)
+          observability        yes    yes    yes         yes
+          (obs=Observability)  (host-side hooks only — every layout above,
+                                sync or async, carries the same metrics/
+                                trace/timeline instrumentation; obs=None
+                                (the default) reduces every hook site to
+                                one predictable branch and the step path
+                                issues ZERO additional device dispatches
+                                either way)
   Cache
       (L, n_slots, ...) slot rows, or (L, n_pages, KV, page_size, hd)
       pools + host page table (models/paging.py).
@@ -129,6 +137,7 @@ import queue as _queue
 import threading
 import time
 from collections import deque
+from contextlib import nullcontext
 from typing import Callable, Optional
 
 import jax
@@ -148,6 +157,8 @@ from repro.models.paging import (
     build_page_table, init_paged_cache, n_caching_attn_layers,
     pages_per_seq, pool_pages_for_budget, pow2_ceil, span_pages,
 )
+
+_NULLCTX = nullcontext()     # shared no-op ctx for un-annotated jit calls
 
 
 # Shared jit cache for UNSHARDED engines. Engine closures capture only the
@@ -194,6 +205,17 @@ class Engine:
     Sharding is captured at CONSTRUCTION time: build the engine inside
     ``use_mesh(mesh)`` to get sharded params/caches — an engine built
     un-meshed stays fully replicated even if later driven under a mesh.
+
+    ``obs`` (an ``repro.obs.Observability``, default None = off) threads
+    the metrics registry / request tracer / step timeline through every
+    lifecycle transition; the registry is labeled ``engine_mode`` (ring /
+    paged / prefix / chunked / chunked_shared) and ``nbl_m`` (linearized
+    block count) at construction. All hooks are host-side — no device
+    dispatch is ever added — and with ``obs=None`` each site costs one
+    branch. ``stats_window`` (default 1024, None = unbounded) bounds the
+    ``stats()`` percentile set to the most recently finished requests so a
+    long-running server's stats call stops re-sorting its whole history;
+    lifetime counts (``n``, counters) are unaffected.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, max_len: int,
@@ -210,7 +232,9 @@ class Engine:
                  prefix_sharing: bool = False,
                  shared_prefix_len: int = 0,
                  chunked_prefill: bool = False,
-                 prefill_chunk_tokens: Optional[int] = None):
+                 prefill_chunk_tokens: Optional[int] = None,
+                 obs=None,
+                 stats_window: Optional[int] = 1024):
         self.paged = bool(paged)
         self.page_size = int(page_size)
         if self.paged and self.page_size & (self.page_size - 1):
@@ -342,15 +366,32 @@ class Engine:
         # emission hooks (AsyncEngine installs these): on_token(req, tok)
         # fires for every generated token the moment _emit records it;
         # on_finish(req) fires exactly once when a request reaches ANY
-        # terminal state (finished / rejected / cancelled). Both run on
-        # whichever thread drives the engine — keep them cheap.
+        # terminal state (finished / rejected / cancelled); on_submit(req)
+        # fires after a servable request is queued — AsyncEngine uses it to
+        # wake its event-driven idle loop, so DIRECT submit() on a wrapped
+        # engine is served without waiting for an unrelated wake. All run
+        # on whichever thread drives the engine — keep them cheap.
         self.on_token: Optional[Callable] = None
         self.on_finish: Optional[Callable] = None
+        self.on_submit: Optional[Callable] = None
         self._count_lock = threading.Lock()    # guards n_rejected only
         self._admit_seq = 0            # monotone admission counter (age)
         self.n_prefix_hits = 0         # admissions served a cached prefix
         self.n_shared_prompt_tokens = 0  # prompt tokens skipped via sharing
         self._pool_in_use_sum = 0      # allocator occupancy, per decode step
+        self.n_finished = 0            # lifetime served-terminal count
+        # guards the finished dict + the stats window deque: _emit/_reject/
+        # _finish_cancelled write on the step thread while stats() snapshots
+        # (and AsyncEngine's retain_results=False pops) from client threads
+        self._finished_lock = threading.Lock()
+        self.stats_window = stats_window
+        self._recent_done = deque(maxlen=int(stats_window)) \
+            if stats_window else None
+        self.obs = obs
+        if obs is not None:
+            obs.bind(engine_mode=self.mode_name,
+                     nbl_m=sum(1 for b in blocks if b.kind == "nbl"))
+            obs.g_slots.set(self.n_slots)
 
         sharded = bool(mesh_axes())
         pspecs = param_specs(jax.eval_shape(lambda: params)) \
@@ -399,6 +440,17 @@ class Engine:
 
     # ------------------------------------------------------------- admin --
 
+    @property
+    def mode_name(self) -> str:
+        """Canonical mode label (the ``engine_mode`` metrics label and the
+        benchmark scenario axis): ring / paged / prefix / chunked /
+        chunked_shared."""
+        if self.chunked:
+            return "chunked_shared" if self.prefix_sharing else "chunked"
+        if self.prefix_sharing:
+            return "prefix"
+        return "paged" if self.paged else "ring"
+
     def submit(self, prompt, max_new: int, *, enc=None,
                strict: bool = False) -> int:
         """Queue a request; returns its id. ``prompt`` 1-D int tokens.
@@ -422,7 +474,13 @@ class Engine:
             err = (f"prompt({prompt.size}) + max_new({max_new}) exceeds "
                    f"engine max_len={self.max_len}")
         else:
-            return self.scheduler.submit(prompt, max_new, enc=enc)
+            req = self.scheduler.make_request(prompt, max_new, enc=enc)
+            self.scheduler.submit_request(req)
+            if self.obs is not None:
+                self.obs.on_submit(req, len(self.scheduler))
+            if self.on_submit is not None:
+                self.on_submit(req)
+            return req.rid
         if strict:
             raise ValueError(err)
         return self._submit_rejected(prompt, max_new, err, enc=enc)
@@ -544,9 +602,12 @@ class Engine:
     def _emit(self, req: Request, slot: int, tok: int, now: float) -> None:
         """Record one generated token; retire the slot when done."""
         req.tokens.append(tok)
-        if not req.t_first:
+        first = not req.t_first
+        if first:
             req.t_first = now
         self.slot_tok[slot] = tok
+        if self.obs is not None:
+            self.obs.on_token(req, first, now)
         if self.on_token is not None:
             self.on_token(req, tok)
         done = (len(req.tokens) >= req.max_new
@@ -556,10 +617,16 @@ class Engine:
             # the next tenancy; freed pages are position-masked until the
             # next owner overwrites them (models/paging.py).
             req.t_finish = now
-            self.finished[req.rid] = req
+            with self._finished_lock:
+                self.finished[req.rid] = req
+                self.n_finished += 1
+                if self._recent_done is not None:
+                    self._recent_done.append(req)
             self.slot_req[slot] = None
             if self.paged:
                 self._release_pages(slot)
+            if self.obs is not None:
+                self.obs.on_retire(req, now)
             if self.on_finish is not None:
                 self.on_finish(req)
 
@@ -579,6 +646,8 @@ class Engine:
         can split preempted from clean TTFT."""
         req = self.slot_req[slot]
         assert req is not None
+        if self.obs is not None:
+            self.obs.on_preempt(req, time.monotonic(), len(req.tokens))
         self._release_pages(slot)
         self.slot_req[slot] = None
         self.slot_chunk_pos[slot] = -1      # mid-prompt progress discarded
@@ -676,12 +745,15 @@ class Engine:
         latency percentiles."""
         req.error = reason
         req.t_finish = time.monotonic()
-        self.finished[req.rid] = req
+        with self._finished_lock:
+            self.finished[req.rid] = req
         # the one counter two threads can bump (a client thread rejecting
         # in submit vs the step thread rejecting at admission): += is a
         # non-atomic read-modify-write
         with self._count_lock:
             self.n_rejected += 1
+        if self.obs is not None:
+            self.obs.on_reject(req, req.t_finish)
         if self.on_finish is not None:
             self.on_finish(req)
 
@@ -721,8 +793,11 @@ class Engine:
     def _finish_cancelled(self, req: Request) -> bool:
         req.cancelled = True
         req.t_finish = time.monotonic()
-        self.finished[req.rid] = req
+        with self._finished_lock:
+            self.finished[req.rid] = req
         self.n_cancelled += 1
+        if self.obs is not None:
+            self.obs.on_cancel(req, req.t_finish)
         if self.on_finish is not None:
             self.on_finish(req)
         return True
@@ -747,6 +822,8 @@ class Engine:
         req.t_admit = now
         self._admit_seq += 1
         req.admit_seq = self._admit_seq
+        if self.obs is not None:
+            self.obs.on_admit(req, now, self.chunked)
         plen = len(req.prompt)
         ps = self.page_size
         start = n_shared * ps                    # first suffix position
@@ -756,6 +833,8 @@ class Engine:
         if n_shared:
             self.n_prefix_hits += 1
             self.n_shared_prompt_tokens += start
+            if self.obs is not None:
+                self.obs.on_prefix_hit(req, start)
         if self.chunked:
             # admitted -> chunking(start): no prefill here — _chunk_step
             # prefills one page-aligned chunk per step, starting past any
@@ -781,13 +860,19 @@ class Engine:
                     jnp.int32(plen))
             args += (jnp.asarray(req.enc)[None],) \
                 if req.enc is not None else ()
-            logits, pcache = fn(*args)
+            with (self.obs.annotate("nbl.prefill")
+                  if self.obs is not None else _NULLCTX):
+                logits, pcache = fn(*args)
             self.n_prefills += 1
             self.n_prefill_tokens += plen
+            if self.obs is not None:
+                self.obs.on_prefill(plen)
             self.cache = self._assign_jit(self.cache, pcache,
                                           jnp.int32(slot))
         self.slot_req[slot] = req
         self.slot_pos[slot] = plen               # position of its 1st token
+        if self.obs is not None:
+            self.obs.on_prefill_done(req, time.monotonic(), plen)
         tok = self._sample(np.asarray(logits[0, -1], np.float32))
         self._emit(req, slot, tok, time.monotonic())
 
@@ -818,9 +903,13 @@ class Engine:
             ptbl[:start_pg] = self.page_tbl[slot, :start_pg]
             args += (self.cache, jnp.asarray(ptbl), jnp.int32(start))
         args += (jnp.asarray(req.enc)[None],) if req.enc is not None else ()
-        logits, pcache = fn(*args)
+        with (self.obs.annotate("nbl.prefill")
+              if self.obs is not None else _NULLCTX):
+            logits, pcache = fn(*args)
         self.n_prefills += 1
         self.n_prefill_tokens += len(span)
+        if self.obs is not None:
+            self.obs.on_prefill(len(span))
         afn = self._assign_paged_fn(cache_len)
         # span tiles map to logical pages [start_pg, ...): hand the assign
         # jit the table row from there, right-padded back to the (static)
@@ -889,6 +978,7 @@ class Engine:
         end = min(filled + self.chunk_tokens, plen)
         start_pg, end_pg = span_pages(filled, end, ps)
         need = end_pg - start_pg                   # >= 1: end > filled
+        t0 = time.monotonic()
         while True:
             ids = self.allocator.alloc(need)
             if ids is not None:
@@ -905,6 +995,8 @@ class Engine:
             younger = [s for s in self.active_slots
                        if self.slot_req[s].admit_seq > req.admit_seq]
             if not younger:
+                if self.obs is not None:
+                    self.obs.on_suspend(req, time.monotonic())
                 return 0
             self._preempt(max(younger,
                               key=lambda s: self.slot_req[s].admit_seq))
@@ -913,7 +1005,10 @@ class Engine:
         # the request's OWN earlier chunks are the "shared prefix"
         logits = self._run_partial_prefill(slot, req, filled, end)
         self.n_chunks += 1
-        if end < plen:
+        final = end >= plen
+        if self.obs is not None:
+            self.obs.on_chunk(req, t0, time.monotonic(), filled, end, final)
+        if not final:
             self.slot_chunk_pos[slot] = end        # suspended till next step
             return 0
         # final chunk: chunking -> decoding
@@ -926,7 +1021,27 @@ class Engine:
     def step(self) -> int:
         """One engine iteration: admit into free slots, then one batched
         decode of everything in flight. Returns #tokens emitted (admission
-        first-tokens included)."""
+        first-tokens included).
+
+        With obs attached, the step is timed (host wall + the decode
+        dispatch/readback split) and rolled up into one StepRecord +
+        engine-track trace span; all of that is host-side bookkeeping —
+        the device sees the exact same dispatch sequence either way."""
+        if self.obs is None:
+            return self._step_impl(None)
+        t0 = time.monotonic()
+        st = {"dispatch_s": 0.0, "n_decoding": 0, "n_chunking": 0,
+              "chunk_tokens": 0, "prefill_tokens0": self.n_prefill_tokens}
+        emitted = self._step_impl(st)
+        self.obs.on_step(
+            self, t0=t0, t1=time.monotonic(), dispatch_s=st["dispatch_s"],
+            n_decoding=st["n_decoding"], n_chunking=st["n_chunking"],
+            tokens_emitted=emitted,
+            prefill_tokens=self.n_prefill_tokens - st["prefill_tokens0"],
+            chunk_tokens=st["chunk_tokens"])
+        return emitted
+
+    def _step_impl(self, st: Optional[dict]) -> int:
         free = [i for i, r in enumerate(self.slot_req) if r is None]
         emitted = 0
         pending = self.scheduler.admit(len(free))
@@ -952,12 +1067,19 @@ class Engine:
                 emitted += 1                   # prefill emits a first token
 
         if self.chunked:
+            if st is not None:
+                ct0 = self.n_prefill_tokens
             emitted += self._chunk_step()
+            if st is not None:
+                st["chunk_tokens"] = self.n_prefill_tokens - ct0
         if self.paged:
             self._ensure_decode_pages()
         active = self.active_slots
         if self.chunked:
-            active = [s for s in active if self.slot_chunk_pos[s] < 0]
+            decoding = [s for s in active if self.slot_chunk_pos[s] < 0]
+            if st is not None:
+                st["n_chunking"] = len(active) - len(decoding)
+            active = decoding
         if not active:
             return emitted
         token = jnp.asarray(self.slot_tok[:, None])
@@ -972,18 +1094,26 @@ class Engine:
             pos = jnp.asarray(posv)
         else:
             pos = jnp.asarray(self.slot_pos)
-        if self.paged:
-            logits, self.cache = self._decode_jit(
-                self.params, token, self.cache, pos,
-                jnp.asarray(self.page_tbl))
-            self._pool_in_use_sum += self.allocator.in_use
-        else:
-            logits, self.cache = self._decode_jit(self.params, token,
-                                                  self.cache, pos)
+        if st is not None:
+            st["n_decoding"] = len(active)
+            td0 = time.monotonic()
+        with (self.obs.annotate("nbl.decode")
+              if st is not None else _NULLCTX):
+            if self.paged:
+                logits, self.cache = self._decode_jit(
+                    self.params, token, self.cache, pos,
+                    jnp.asarray(self.page_tbl))
+                self._pool_in_use_sum += self.allocator.in_use
+            else:
+                logits, self.cache = self._decode_jit(self.params, token,
+                                                      self.cache, pos)
         self.n_decode_steps += 1
         if self.chunked and np.any(self.slot_chunk_pos >= 0):
             self.n_interleaved_decode_steps += 1   # decode BETWEEN chunks
         rows = np.asarray(logits[:, -1], np.float32)
+        if st is not None:
+            # dispatch + the logits device->host readback the sample needs
+            st["dispatch_s"] = time.monotonic() - td0
         now = time.monotonic()
         for slot in active:
             req = self.slot_req[slot]
@@ -1007,8 +1137,35 @@ class Engine:
         return {rid: np.asarray(r.tokens, np.int32)
                 for rid, r in sorted(self.finished.items())}
 
+    def _drop_finished(self, rid: int) -> None:
+        """Forget a terminal request's record (AsyncEngine's
+        retain_results=False memory knob) without racing a concurrent
+        ``stats()`` snapshot of the finished dict."""
+        with self._finished_lock:
+            self.finished.pop(rid, None)
+
     def stats(self) -> dict:
-        s = latency_stats(list(self.finished.values()))
+        """End-of-run / live summary: latency percentiles + engine
+        counters. Thread-safe against the step loop (the finished-dict
+        snapshot is taken under the same lock every terminal transition
+        writes under). With ``stats_window`` set (the default), the
+        percentiles cover the most recently finished ``stats_window``
+        served requests — O(window) per call instead of O(lifetime), and
+        immune to AsyncEngine's retain_results=False dropping records —
+        while ``n`` stays the lifetime served count (``window_n`` reports
+        the percentile subset size when it clipped)."""
+        with self._finished_lock:
+            if self._recent_done is not None:
+                reqs = list(self._recent_done)
+                n_finished = self.n_finished
+            else:
+                reqs = list(self.finished.values())
+                n_finished = None
+        s = latency_stats(reqs)
+        if n_finished is not None:
+            if s["n"] < n_finished:
+                s["window_n"] = s["n"]
+            s["n"] = n_finished
         s.update(n_slots=self.n_slots, n_decode_steps=self.n_decode_steps,
                  n_prefills=self.n_prefills,
                  n_prefill_tokens=self.n_prefill_tokens,
@@ -1182,6 +1339,11 @@ class AsyncEngine:
         self._exc: Optional[BaseException] = None
         engine.on_token = self._on_token
         engine.on_finish = self._on_finish
+        # wake the idle loop on ANY servable submission — including a
+        # DIRECT engine.submit() on the wrapped engine, which otherwise
+        # sits queued until an unrelated wake (submit_stream sets _wake
+        # itself, so this is belt-and-braces there)
+        engine.on_submit = lambda req: self._wake.set()
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="nbl-engine-step-loop")
         self._thread.start()
@@ -1216,7 +1378,7 @@ class AsyncEngine:
                 # rejections never retain engine-side: sustained overload
                 # is exactly what max_pending bounds, and pinning every
                 # rejected prompt in engine.finished would unbound it
-                self.engine.finished.pop(rid, None)
+                self.engine._drop_finished(rid)
             elif self._dead:
                 # lost the race with shutdown: the step thread already tore
                 # down (its final act, under this lock, was _dead = True),
@@ -1320,6 +1482,7 @@ class AsyncEngine:
             s._end("aborted", msg)
         self.engine.on_token = None
         self.engine.on_finish = None
+        self.engine.on_submit = None
 
     # ------------------------------------------------------- engine hooks
 
@@ -1355,4 +1518,4 @@ class AsyncEngine:
             # otherwise also grow without bound under continuous traffic.
             # Rejections are dropped UNCONDITIONALLY — overload must not
             # grow memory per rejected request (see submit_stream)
-            self.engine.finished.pop(req.rid, None)
+            self.engine._drop_finished(req.rid)

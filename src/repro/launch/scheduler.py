@@ -190,9 +190,15 @@ class Scheduler:
         if max_new < 1:
             raise ValueError(f"max_new must be >= 1, got {max_new}")
         req = self.make_request(prompt, max_new, enc=enc, now=now)
+        self.submit_request(req)
+        return req.rid
+
+    def submit_request(self, req: Request) -> None:
+        """Queue an already-built Request (the engine's traced submit path
+        makes the request first so its rid/t_submit can feed the obs
+        hooks, then queues it here)."""
         with self._lock:                     # serialize vs remove()'s scan
             self.queue.append(req)
-        return req.rid
 
     def admit(self, free_slots: int) -> list[Request]:
         """Pop FIFO requests for this step: at most min(free_slots,
@@ -238,7 +244,8 @@ class Scheduler:
         return len(self.queue)
 
 
-def latency_stats(requests: list[Request]) -> dict:
+def latency_stats(requests: list[Request],
+                  window: Optional[int] = None) -> dict:
     """requests/s + latency/TTFT percentiles + per-request decode speed over
     a finished request set. Tail TTFT (p99) and per-request decode tokens/s
     are the evidence the paged-vs-ring comparison needs: paging admits more
@@ -255,7 +262,16 @@ def latency_stats(requests: list[Request]) -> dict:
     a garbage negative TTFT) are likewise excluded and surface as
     ``n_cancelled``. Queue-delay percentiles (submit → admission wait, the
     async host loop's backpressure signal) are reported over requests whose
-    admission timestamp survived (preemption rewinds it)."""
+    admission timestamp survived (preemption rewinds it).
+
+    ``window`` (None = unbounded) restricts the percentile set to the most
+    RECENTLY FINISHED ``window`` served requests — the long-running-server
+    path: without it every ``stats()`` call re-sorts the entire retained
+    history, O(n log n) in server lifetime. Terminal counts (``n``,
+    ``n_rejected``, ``n_cancelled``) always cover the full input (the
+    engine's counters are lifetime-monotone); only the percentile arrays
+    and the throughput span are windowed, and ``window_n`` reports the
+    subset size whenever a window actually clipped."""
     rejected = [r for r in requests if r.error is not None]
     cancelled = [r for r in requests if r.cancelled and r.error is None]
     done = [r for r in requests
@@ -263,6 +279,12 @@ def latency_stats(requests: list[Request]) -> dict:
     if not done:
         return {"n": 0, "n_rejected": len(rejected),
                 "n_cancelled": len(cancelled)}
+    n_total_done = len(done)
+    if window is not None and len(done) > window:
+        # most recently finished subset; selection is O(n), and the
+        # percentile sorts below then cost O(window log window)
+        done.sort(key=lambda r: r.t_finish)
+        done = done[-window:]
     lat = np.array([r.latency for r in done])
     ttft = np.array([r.ttft for r in done])
     # decode rate excludes the prefill-emitted first token; requests that
@@ -273,7 +295,7 @@ def latency_stats(requests: list[Request]) -> dict:
             - min(r.t_submit for r in done)) or 1e-9
     preempted = [r for r in done if r.n_preemptions > 0]
     out = {
-        "n": len(done),
+        "n": n_total_done,
         "n_rejected": len(rejected),
         "n_cancelled": len(cancelled),
         "requests_per_s": len(done) / span,
@@ -284,6 +306,8 @@ def latency_stats(requests: list[Request]) -> dict:
         "p99_ttft_s": float(np.percentile(ttft, 99)),
         "n_preempted_requests": len(preempted),
     }
+    if len(done) < n_total_done:
+        out["window_n"] = len(done)
     if preempted:
         pttft = np.array([r.ttft for r in preempted])
         out["p99_ttft_preempted_s"] = float(np.percentile(pttft, 99))

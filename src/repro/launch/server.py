@@ -22,6 +22,7 @@ client -> server ops::
     {"op": "cancel", "rid": int}     cancel in ANY lifecycle state; scoped
                                      to rids submitted on THIS connection
     {"op": "stats"}                  engine stats() + allocator occupancy
+    {"op": "metrics"}                live observability scrape (see below)
     {"op": "ping"}
     {"op": "shutdown"}               drain the engine and stop the server
 
@@ -38,6 +39,18 @@ server -> client events::
          rejection is an event, never a dropped connection)
     {"event": "cancelling", "rid": int}     cancel op acknowledged
     {"event": "stats", "stats": {...}}
+    {"event": "metrics", "enabled": bool, "metrics": {...},
+     "prometheus": str}
+        Consistent point-in-time scrape of the engine's observability
+        registry (repro.obs): "metrics" is the JSON snapshot — {"labels"
+        (engine_mode / nbl_m), "counters", "gauges", "histograms"
+        (cumulative [upper_bound, count] pairs), "last_step" (the newest
+        step-timeline record)} — and "prometheus" is the SAME scrape in
+        Prometheus text exposition format (# HELP / # TYPE / series
+        lines), ready to proxy to any Prometheus scraper. Observability
+        is ON by default (--no-obs disables it; the scrape then returns
+        {"enabled": false} only). --trace-out FILE additionally exports
+        the per-request Chrome-trace/Perfetto timeline at shutdown.
     {"event": "pong"} / {"event": "bye"}
     {"event": "error", "error": str}        malformed line; connection
                                             stays up
@@ -185,6 +198,14 @@ class NBLServer:
                 elif op == "stats":
                     send({"event": "stats",
                           "stats": _jsonable(self.aeng.stats())})
+                elif op == "metrics":
+                    obs = self.aeng.engine.obs
+                    if obs is None:
+                        send({"event": "metrics", "enabled": False})
+                    else:
+                        send({"event": "metrics", "enabled": True,
+                              "metrics": obs.snapshot(),
+                              "prometheus": obs.render_prometheus()})
                 elif op == "ping":
                     send({"event": "pong"})
                 elif op == "shutdown":
@@ -258,6 +279,10 @@ def _build_engine(args) -> Engine:
             kw.update(prefill_chunk_tokens=args.prefill_chunk_tokens)
     if args.expected_len is not None:
         kw.update(expected_len=args.expected_len)
+    if not args.no_obs:
+        from repro.obs import Observability
+        kw.update(obs=Observability(
+            trace_annotations=args.trace_annotations))
     n_slots = args.n_slots
     budget = (int(args.cache_budget_mb * 2**20)
               if args.cache_budget_mb is not None else None)
@@ -298,8 +323,20 @@ def main(argv: Optional[list] = None) -> int:
     ap.add_argument("--no-retain-results", action="store_true",
                     help="drop each finished request from engine memory "
                          "once its stream has delivered it (long-running "
-                         "deployments; stats percentiles then cover only "
-                         "in-flight history)")
+                         "deployments; the stats-window percentile path "
+                         "keeps percentiles meaningful regardless)")
+    ap.add_argument("--no-obs", action="store_true",
+                    help="disable the observability layer (metrics op "
+                         "then returns enabled=false); default on — "
+                         "host-side only, no extra device dispatches")
+    ap.add_argument("--trace-annotations", action="store_true",
+                    help="wrap prefill/decode jit calls in jax.profiler."
+                         "TraceAnnotation (lines device profiles up with "
+                         "the host trace; needs obs enabled)")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="export the request/step trace as a Chrome-trace/"
+                         "Perfetto JSON file at shutdown (needs obs "
+                         "enabled; open at https://ui.perfetto.dev)")
     args = ap.parse_args(argv)
 
     eng = _build_engine(args)
@@ -323,6 +360,10 @@ def main(argv: Optional[list] = None) -> int:
         except RuntimeError as e:            # step loop died: report it
             print(f"server error: {e}", file=sys.stderr)
             return 1
+        if args.trace_out and eng.obs is not None \
+                and eng.obs.tracer is not None:
+            n = eng.obs.tracer.export_chrome_trace(args.trace_out)
+            print(f"trace: {n} events -> {args.trace_out}", file=sys.stderr)
     return 0
 
 

@@ -260,6 +260,15 @@ class PageAllocator:
     def refcount(self, pid: int) -> int:
         return self._refs.get(pid, 0)
 
+    def refcount_histogram(self) -> dict:
+        """``{refcount: n_pages}`` over live pages — how shared the pool is
+        (rc 1 = private or index-only, rc >= 2 = actively shared). O(in_use)
+        on the host; the obs step timeline records it every step."""
+        hist: dict = {}
+        for c in self._refs.values():
+            hist[c] = hist.get(c, 0) + 1
+        return hist
+
     def alloc(self, n: int) -> Optional[list[int]]:
         if n < 0:
             raise ValueError(f"alloc({n})")
@@ -351,6 +360,7 @@ class PrefixIndex:
         self.root: dict = {}                      # chunk tokens -> _TrieNode
         self._clock = 0
         self.n_entries = 0
+        self.n_evictions = 0                      # lifetime LRU pages dropped
 
     def _tick(self) -> int:
         self._clock += 1
@@ -450,6 +460,7 @@ class PrefixIndex:
             self.n_entries -= 1
             allocator.unref([node.page])
             freed += 1
+        self.n_evictions += freed
         return freed
 
 

@@ -1,0 +1,233 @@
+"""Per-request trace spans + engine step track, exportable to Perfetto.
+
+Every request gets its own TRACK (trace_event ``tid`` = rid) carrying the
+lifecycle as a sequence of non-overlapping spans::
+
+    queued -> prefill -> decoding -> (terminal)          # non-chunked
+    queued -> chunk x N -> decoding -> (terminal)        # chunked prefill
+
+with instant events for ``first_token``, ``preempt`` (which re-opens a
+``queued`` span — the request is requeued and restarts from its prompt)
+and ``suspend`` (a mid-prompt chunking slot parked under pool pressure).
+Terminal status is one of ``retired`` / ``cancelled`` / ``rejected`` /
+``aborted``; ``terminate`` closes any span still open so a trace is always
+well-formed at the end of a request's life.
+
+The ENGINE track (``tid`` = "engine") records one span per ``step()``
+(args: decoding/chunking slot counts, tokens emitted, chunk tokens) — in
+the Perfetto UI the chunked engine's interleaving claim is literally
+visible: decode-step spans with ``n_decoding > 0`` sitting between a
+request's chunk spans.
+
+Timestamps are ``time.monotonic`` seconds (the same clock the Request
+lifecycle fields use); exports convert to the microseconds trace_event
+wants. Memory is bounded: at most ``max_traces`` request traces are
+retained (oldest TERMINAL traces evicted first) and the engine track is a
+ring of ``max_engine_events``.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass
+class Span:
+    name: str
+    t0: float
+    t1: Optional[float] = None            # None while open
+    args: dict = field(default_factory=dict)
+
+
+@dataclass
+class RequestTrace:
+    rid: int
+    spans: list = field(default_factory=list)      # closed in open order
+    events: list = field(default_factory=list)     # (name, t, args) instants
+    status: Optional[str] = None                   # terminal state
+    _open: list = field(default_factory=list)      # stack of open spans
+
+    def validate(self) -> None:
+        """Well-formedness: every span closed with t1 >= t0, spans on the
+        track strictly sequenced (no overlap), and a terminal status set.
+        Raises AssertionError with the offending trace on violation."""
+        assert self.status is not None, f"rid {self.rid}: no terminal status"
+        assert not self._open, \
+            f"rid {self.rid}: open spans at terminal: " \
+            f"{[s.name for s in self._open]}"
+        prev_end = -float("inf")
+        for s in sorted(self.spans, key=lambda s: (s.t0, s.t1)):
+            assert s.t1 is not None and s.t1 >= s.t0, (self.rid, s)
+            assert s.t0 >= prev_end - 1e-9, \
+                f"rid {self.rid}: span {s.name!r} overlaps previous " \
+                f"(t0={s.t0} < prev_end={prev_end})"
+            prev_end = s.t1
+
+
+class Tracer:
+    """Thread-safe recorder of request lifecycle spans + engine steps."""
+
+    def __init__(self, *, max_traces: int = 4096,
+                 max_engine_events: int = 4096):
+        self._lock = threading.Lock()
+        self._traces: OrderedDict = OrderedDict()   # rid -> RequestTrace
+        self.max_traces = int(max_traces)
+        self.engine_events: deque = deque(maxlen=int(max_engine_events))
+        self._t0 = time.monotonic()                 # export origin
+
+    # ------------------------------------------------------ request track
+
+    def _trace(self, rid: int) -> RequestTrace:
+        tr = self._traces.get(rid)
+        if tr is None:
+            tr = self._traces[rid] = RequestTrace(rid)
+            if len(self._traces) > self.max_traces:
+                # evict the oldest TERMINAL trace; never drop a live one
+                for r, t in self._traces.items():
+                    if t.status is not None:
+                        del self._traces[r]
+                        break
+        return tr
+
+    def begin(self, rid: int, name: str, t: Optional[float] = None,
+              **args) -> None:
+        with self._lock:
+            tr = self._trace(rid)
+            tr._open.append(Span(name, time.monotonic() if t is None else t,
+                                 args=args))
+
+    def has_open(self, rid: int, name: str) -> bool:
+        with self._lock:
+            tr = self._traces.get(rid)
+            return bool(tr and tr._open and tr._open[-1].name == name)
+
+    def end(self, rid: int, name: str, t: Optional[float] = None,
+            **args) -> None:
+        """Close the innermost open span (must be ``name``); a close with
+        no matching open span is a no-op — admission may see requests that
+        bypassed the traced submit path (direct Scheduler.submit)."""
+        with self._lock:
+            tr = self._traces.get(rid)
+            if tr is None or not tr._open or tr._open[-1].name != name:
+                return
+            s = tr._open.pop()
+            s.t1 = time.monotonic() if t is None else t
+            s.args.update(args)
+            tr.spans.append(s)
+
+    def instant(self, rid: int, name: str, t: Optional[float] = None,
+                **args) -> None:
+        with self._lock:
+            self._trace(rid).events.append(
+                (name, time.monotonic() if t is None else t, args))
+
+    def terminate(self, rid: int, status: str,
+                  t: Optional[float] = None) -> None:
+        """Close every open span and stamp the terminal status. Idempotent:
+        the first terminal transition wins (a cancel racing a retire must
+        not rewrite history)."""
+        now = time.monotonic() if t is None else t
+        with self._lock:
+            tr = self._trace(rid)
+            if tr.status is not None:
+                return
+            while tr._open:
+                s = tr._open.pop()
+                s.t1 = now
+                tr.spans.append(s)
+            tr.status = status
+
+    # ------------------------------------------------------- engine track
+
+    def step_event(self, name: str, t0: float, t1: float, **args) -> None:
+        with self._lock:
+            self.engine_events.append(Span(name, t0, t1, args))
+
+    # ----------------------------------------------------------- reading
+
+    def get(self, rid: int) -> Optional[RequestTrace]:
+        with self._lock:
+            return self._traces.get(rid)
+
+    def traces(self) -> list:
+        with self._lock:
+            return list(self._traces.values())
+
+    def validate_all(self) -> None:
+        """Assert well-formedness of every TERMINAL trace (live requests
+        legitimately hold open spans)."""
+        for tr in self.traces():
+            if tr.status is not None:
+                tr.validate()
+
+    # ----------------------------------------------------------- exports
+
+    def _us(self, t: float) -> float:
+        return (t - self._t0) * 1e6
+
+    def export_jsonl(self, path: str) -> int:
+        """One JSON object per line: request rows ({"rid", "status",
+        "spans": [...], "events": [...]}) then engine-step rows. Returns
+        the number of lines written."""
+        n = 0
+        with open(path, "w") as f:
+            for tr in self.traces():
+                row = {"rid": tr.rid, "status": tr.status,
+                       "spans": [{"name": s.name, "t0": s.t0, "t1": s.t1,
+                                  "args": s.args} for s in tr.spans],
+                       "events": [{"name": e[0], "t": e[1], "args": e[2]}
+                                  for e in tr.events]}
+                f.write(json.dumps(row) + "\n")
+                n += 1
+            with self._lock:
+                steps = list(self.engine_events)
+            for s in steps:
+                f.write(json.dumps({"engine_step": s.name, "t0": s.t0,
+                                    "t1": s.t1, "args": s.args}) + "\n")
+                n += 1
+        return n
+
+    def chrome_trace(self) -> dict:
+        """Chrome ``trace_event`` JSON (open in Perfetto / chrome://tracing):
+        complete ("X") events per span, instant ("i") events, one tid per
+        request plus the engine-step track on tid 0."""
+        ev: list = [
+            {"name": "process_name", "ph": "M", "pid": 1, "tid": 0,
+             "args": {"name": "nbl-engine"}},
+            {"name": "thread_name", "ph": "M", "pid": 1, "tid": 0,
+             "args": {"name": "engine-steps"}},
+        ]
+        with self._lock:
+            steps = list(self.engine_events)
+            traces = list(self._traces.values())
+        for s in steps:
+            ev.append({"name": s.name, "ph": "X", "pid": 1, "tid": 0,
+                       "ts": self._us(s.t0),
+                       "dur": max(0.0, self._us(s.t1) - self._us(s.t0)),
+                       "args": s.args})
+        for tr in traces:
+            tid = tr.rid + 1                       # 0 is the engine track
+            ev.append({"name": "thread_name", "ph": "M", "pid": 1,
+                       "tid": tid,
+                       "args": {"name": f"request {tr.rid} "
+                                        f"[{tr.status or 'live'}]"}})
+            for s in tr.spans:
+                ev.append({"name": s.name, "ph": "X", "pid": 1, "tid": tid,
+                           "ts": self._us(s.t0),
+                           "dur": max(0.0,
+                                      self._us(s.t1) - self._us(s.t0)),
+                           "args": s.args})
+            for name, t, args in tr.events:
+                ev.append({"name": name, "ph": "i", "pid": 1, "tid": tid,
+                           "ts": self._us(t), "s": "t", "args": args})
+        return {"traceEvents": ev, "displayTimeUnit": "ms"}
+
+    def export_chrome_trace(self, path: str) -> int:
+        trace = self.chrome_trace()
+        with open(path, "w") as f:
+            json.dump(trace, f)
+        return len(trace["traceEvents"])

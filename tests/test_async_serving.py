@@ -291,6 +291,25 @@ def test_async_oversize_submit_streams_rejection():
         assert aeng._early_end == {}
 
 
+def test_async_direct_submit_wakes_idle_loop():
+    """A DIRECT engine.submit() on a wrapped engine must wake the
+    event-driven step loop (Engine.on_submit hook): with the loop parked
+    idle, the request is served promptly instead of waiting for the next
+    unrelated wake (regression: the loop used to learn about direct
+    submissions only when submit_stream/cancel/shutdown set the event)."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, max_len=16, n_slots=1)
+    with AsyncEngine(eng) as aeng:
+        time.sleep(0.2)                    # loop is parked in _wake.wait()
+        rid = eng.submit(np.arange(3, dtype=np.int32), 2)
+        deadline = time.monotonic() + 10
+        while rid not in eng.finished and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert rid in eng.finished, "idle loop never woke for direct submit"
+        assert len(eng.finished[rid].tokens) == 2
+        assert aeng._early_end == {}
+
+
 def test_async_shutdown_abort_cancels_live():
     """shutdown(drain=False) cancels everything still live: streams end
     terminally, pages are returned, nothing leaks."""

@@ -40,6 +40,7 @@ from repro.launch.engine import AsyncEngine, Engine
 from repro.launch.serve import generate
 from repro.models import decode_step, init_params, prefill
 from repro.models.paging import PageAllocator, pages_per_seq
+from repro.obs import Observability
 
 MAX_LEN = 32
 PAGE_SIZE = 4
@@ -145,14 +146,38 @@ def _check_invariants(eng: Engine) -> None:
             assert not held and not row, (slot, held, row)
 
 
+def _check_obs(eng: Engine, obs: Observability) -> None:
+    """Registry counters cross-validated token-exactly against the
+    engine's own hand-maintained counters and the terminal request state:
+    every emission is counted once, preempted work shows up as discarded
+    tokens (kept + discarded == emitted), lifecycle counters match, and
+    every request's span tree validates (nested, terminated, no overlap)."""
+    assert obs.decode_steps.value == eng.n_decode_steps
+    assert obs.prefills.value == eng.n_prefills
+    assert obs.chunks.value == eng.n_chunks
+    assert obs.preemptions.value == eng.n_preemptions
+    assert obs.cancelled.value == eng.n_cancelled
+    assert obs.rejected.value == eng.n_rejected
+    assert obs.finished.value == eng.n_finished
+    assert obs.prefix_hits.value == eng.n_prefix_hits
+    assert obs.interleaved.value == eng.n_interleaved_decode_steps
+    if eng.prefix_sharing:
+        assert obs.evictions.value == eng.prefix_index.n_evictions
+    kept = sum(len(r.tokens) for r in eng.finished.values())
+    assert obs.tokens.value == kept + obs.tokens_discarded.value, \
+        (obs.tokens.value, kept, obs.tokens_discarded.value)
+    obs.tracer.validate_all()
+
+
 def _replay(mode: str, seed: int) -> None:
     w = _draw_workload(seed)
     cfg, params = _setup(w["arch"])
     kw = dict(MODES[mode])
     if kw.get("chunked_prefill"):
         kw["prefill_chunk_tokens"] = w["chunk_tokens"]
+    obs = Observability()
     eng = Engine(cfg, params, max_len=MAX_LEN, n_slots=w["n_slots"],
-                 eos_id=w["eos_id"], **kw)
+                 eos_id=w["eos_id"], obs=obs, **kw)
     if eng.paged:
         n_pages = w["n_pages"]
         eng.allocator = PageAllocator(n_pages)
@@ -161,14 +186,19 @@ def _replay(mode: str, seed: int) -> None:
     pending = sorted(enumerate(w["reqs"]), key=lambda r: r[1][2])
     rids: dict[int, int] = {}
     t = 0
+    hand_emitted = 0                 # Σ step() returns — the oracle count
     while pending or eng.has_work:
         while pending and pending[0][1][2] <= t:
             i, (prompt, max_new, _) = pending.pop(0)
             rids[i] = eng.submit(prompt, max_new)
-        eng.step()
+        hand_emitted += eng.step()
         _check_invariants(eng)
         t += 1
         assert t < 600, "fuzz workload failed to drain"
+
+    # registry counters == hand counts, token-exact
+    assert obs.tokens.value == hand_emitted, (obs.tokens.value, hand_emitted)
+    _check_obs(eng, obs)
 
     # token-exact parity with the generate() oracle, request by request
     for i, (prompt, max_new, _) in enumerate(w["reqs"]):
@@ -199,8 +229,9 @@ def _replay_async(mode: str, seed: int) -> None:
     kw = dict(MODES[mode])
     if kw.get("chunked_prefill"):
         kw["prefill_chunk_tokens"] = w["chunk_tokens"]
+    obs = Observability()
     eng = Engine(cfg, params, max_len=MAX_LEN, n_slots=w["n_slots"],
-                 eos_id=w["eos_id"], **kw)
+                 eos_id=w["eos_id"], obs=obs, **kw)
     if eng.paged:
         eng.allocator = PageAllocator(w["n_pages"])
         eng.n_pages = w["n_pages"]
@@ -257,6 +288,15 @@ def _replay_async(mode: str, seed: int) -> None:
         held = eng.prefix_index.n_entries if eng.prefix_sharing else 0
         assert eng.allocator.in_use == held, (eng.allocator.in_use, held)
         eng.allocator.check_invariants()
+
+    # registry cross-validation: streamed tokens (kept) + preempt-discarded
+    # must account for every emission, lifecycle counters must match the
+    # engine's, and every span tree must validate even for the requests
+    # cancelled mid-chunking / mid-decode by the seeded offsets
+    streamed = sum(len(s.tokens) for s in streams)
+    kept = sum(len(r.tokens) for r in eng.finished.values())
+    assert streamed == kept, (streamed, kept)
+    _check_obs(eng, obs)
 
 
 N_EXAMPLES = int(os.environ.get("NBL_FUZZ_EXAMPLES", "3"))
