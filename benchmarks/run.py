@@ -48,11 +48,12 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import clock
 
 ROWS: list[tuple[str, object, str]] = []
 
@@ -133,7 +134,7 @@ def bench_calibration_runtime(fast: bool) -> None:
         y = (x @ (rng.standard_normal((d, d)).astype(np.float32) * 0.1))
         ts = []
         for _ in range(TIMED_REPEATS):       # min-over-repeats (see top)
-            t0 = time.perf_counter()
+            t0 = clock()
             mom = init_moments(d, d)
             for i in range(0, tokens, 1024):
                 mom = update_moments(mom, x[i:i + 1024], y[i:i + 1024])
@@ -141,7 +142,7 @@ def bench_calibration_runtime(fast: bool) -> None:
             fin = finalize(mom)
             cca_bound_from_moments(fin)
             lmmse_from_moments(fin)
-            ts.append(time.perf_counter() - t0)
+            ts.append(clock() - t0)
         emit(f"calibration/layer_runtime_d{d}", round(min(ts) * 1e6, 1),
              "us_per_layer")
 
@@ -239,10 +240,10 @@ def bench_serving(fast: bool) -> None:
         dts, p50s, p99s, toks, sweeps = [], [], [], [], []
         for _ in range(TIMED_REPEATS):
             steps0 = eng.n_decode_steps
-            t0 = time.perf_counter()
+            t0 = clock()
             rids = [eng.submit(p, max_new) for p in prompts]
             eng.run()
-            dts.append(time.perf_counter() - t0)
+            dts.append(clock() - t0)
             timed = [eng.finished[r] for r in rids]
             s = latency_stats(timed)
             p50s.append(s["p50_latency_s"])
@@ -302,10 +303,10 @@ def bench_paged(fast: bool) -> None:
             dts, p99s, sweeps = [], [], []
             for _ in range(TIMED_REPEATS):
                 steps0 = eng.n_decode_steps
-                t0 = time.perf_counter()
+                t0 = clock()
                 rids = [eng.submit(p, max_new) for p in prompts]
                 eng.run()
-                dts.append(time.perf_counter() - t0)
+                dts.append(clock() - t0)
                 s = latency_stats([eng.finished[r] for r in rids])
                 p99s.append(s["p99_ttft_s"])
                 sweeps.append(eng.n_decode_steps - steps0)
@@ -390,10 +391,10 @@ def bench_prefix(fast: bool) -> None:
             dts, p50s, ptoks_reps = [], [], []
             for rep in range(TIMED_REPEATS):
                 tok0 = eng.n_prefill_tokens
-                t0 = time.perf_counter()
+                t0 = clock()
                 rids = [eng.submit(p, max_new) for p in prompts]
                 out = eng.run()
-                dts.append(time.perf_counter() - t0)
+                dts.append(clock() - t0)
                 for rid, want in zip(rids, refs):  # exact parity, both modes
                     np.testing.assert_array_equal(out[rid], want)
                 s = latency_stats([eng.finished[r] for r in rids])
@@ -486,9 +487,9 @@ def bench_chunked(fast: bool) -> None:
         gaps = []
         long_first = None
         while eng.has_work:
-            t0 = time.perf_counter()
+            t0 = clock()
             eng.step()
-            dt = time.perf_counter() - t0
+            dt = clock() - t0
             req = eng.finished.get(lid) or next(
                 (r for r in eng.slot_req
                  if r is not None and r.rid == lid), None)
@@ -596,7 +597,7 @@ def bench_async(fast: bool) -> None:
                          obs=obs)
             aeng = AsyncEngine(eng, max_pending=2 * n_req)
             streams = [None] * n_req
-            t0 = time.perf_counter()
+            t0 = clock()
 
             def client(tid):                 # round-robin request sharding
                 for i in range(tid, n_req, n_client_threads):
@@ -610,7 +611,7 @@ def bench_async(fast: bool) -> None:
                 t.start()
             for t in ts:
                 t.join(300)
-            dt = time.perf_counter() - t0
+            dt = clock() - t0
             aeng.shutdown(drain=True)
             ntok = 0
             for s, want in zip(streams, refs):
@@ -678,7 +679,9 @@ def bench_async(fast: bool) -> None:
     assert slots_by_m == sorted(slots_by_m), slots_by_m
     emit("async/concurrency_monotone_in_m", 1, "assert")
     # the scenario artifact carries the last pass's full registry snapshot
-    return {"registry": obs.snapshot()}
+    # (obs here is the TIMED_REPEATS loop's last binding, from run_once()
+    # with the with_obs=True default — never None on this path)
+    return {"registry": obs.snapshot()}  # nbl: disable=obs-hygiene -- bound by run_once(with_obs=True)
 
 
 # ---------------------------------------------------------------------------
@@ -702,9 +705,9 @@ def bench_kernels(fast: bool) -> None:
         fn()  # compile
         ts = []
         for _ in range(TIMED_REPEATS):       # min-over-repeats (see top)
-            t0 = time.perf_counter()
+            t0 = clock()
             jax.block_until_ready(fn())
-            ts.append(time.perf_counter() - t0)
+            ts.append(clock() - t0)
         emit(f"kernels/{name}", round(min(ts) * 1e6, 1),
              "us_per_call_interpret")
 

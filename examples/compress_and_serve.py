@@ -9,7 +9,6 @@ shrink, and the serve-step FLOP reduction (the structural speed-up that
 turns into the paper's 1.1-1.5× on real hardware).
 """
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +20,7 @@ from repro.data import ZipfMarkov, calib_factory
 from repro.launch.serve import generate
 from repro.launch.train import train
 from repro.models.kv_cache import cache_bytes
+from repro.obs import clock
 
 
 def main() -> None:
@@ -48,9 +48,9 @@ def main() -> None:
     outs = {}
     for tag, (c, p) in {"baseline": (cfg, params),
                         f"nbl-{args.m}": (ncfg, nparams)}.items():
-        t0 = time.perf_counter()
+        t0 = clock()
         toks = generate(c, p, prompts, max_new=args.new)
-        dt = time.perf_counter() - t0
+        dt = clock() - t0
         outs[tag] = np.asarray(toks)
         kv = cache_bytes(c, args.batch, 16 + args.new)
         print(f"{tag:10s} {dt:6.2f}s wall (CPU)  kv-cache {kv:,} B  "

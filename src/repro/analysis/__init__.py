@@ -1,0 +1,95 @@
+"""repro.analysis — AST-based multi-pass static checker for the NBL stack.
+
+Dependency-free (stdlib ``ast`` only; importable before jax/numpy). Four
+passes over the source tree enforce the conventions the serving engine's
+correctness and throughput rest on:
+
+===============  ============================================================
+rule             enforces
+===============  ============================================================
+guarded-by       ``# guarded-by: <lock>`` attrs touched only under the lock
+lock-order       no Lock self-deadlock, no cross-lock acquisition cycles
+jit-discipline   function-scope ``jax.jit`` routes through ``shared_jit``
+jit-retrace      jit-in-loop / unhashable statics / unbucketed loop shapes
+host-sync        no device→host syncs reachable from ``Engine._step_impl``
+perf-counter     ``time.perf_counter`` confined to ``src/repro/obs/``
+obs-hygiene      every obs hook call behind an ``is not None`` guard
+===============  ============================================================
+
+CLI: ``python -m repro.analysis [paths...] [--json out.json]`` — exits 0
+when every finding is suppressed inline or baselined, 1 otherwise. See
+``docs/static-analysis.md`` for the rule catalog and workflows.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Set, Tuple
+
+from . import guarded_by, host_sync, jit_discipline, obs_hygiene
+from .core import (
+    ALL_RULES,
+    Finding,
+    Project,
+    SourceModule,
+    SCHEMA_VERSION,
+    collect_modules,
+    filter_baselined,
+    load_baseline,
+    save_baseline,
+)
+
+__all__ = [
+    "ALL_RULES",
+    "Finding",
+    "Project",
+    "SCHEMA_VERSION",
+    "analyze_modules",
+    "analyze_paths",
+    "analyze_source",
+    "collect_modules",
+    "filter_baselined",
+    "load_baseline",
+    "save_baseline",
+]
+
+
+def analyze_modules(
+    modules: Sequence[SourceModule],
+    rules: Optional[Set[str]] = None,
+    entry: str = host_sync.DEFAULT_ENTRY,
+) -> List[Finding]:
+    """Run every pass over ``modules``; inline suppressions applied."""
+    project = Project(modules)
+    raw: List[Finding] = []
+    raw += guarded_by.run(project)
+    raw += jit_discipline.run(project)
+    raw += host_sync.run(project, entry=entry)
+    raw += obs_hygiene.run(project)
+    by_rel = {m.rel: m for m in modules}
+    out = []
+    for f in raw:
+        if rules is not None and f.rule not in rules:
+            continue
+        mod = by_rel.get(f.path)
+        if mod is not None and mod.is_suppressed(f.line, f.rule):
+            continue
+        out.append(f)
+    out.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+    return out
+
+
+def analyze_paths(
+    paths: Sequence[str], root: str, rules: Optional[Set[str]] = None
+) -> List[Finding]:
+    return analyze_modules(collect_modules(paths, root), rules=rules)
+
+
+def analyze_source(
+    text: str,
+    rel: str = "fixture.py",
+    rules: Optional[Set[str]] = None,
+    entry: str = host_sync.DEFAULT_ENTRY,
+) -> List[Finding]:
+    """Analyze a source string — the test-fixture entry point."""
+    return analyze_modules(
+        [SourceModule(rel, text, rel)], rules=rules, entry=entry
+    )

@@ -1,0 +1,102 @@
+"""CLI for ``repro.analysis``.
+
+    python -m repro.analysis [paths...] [--json FILE] [--baseline FILE]
+                             [--rule RULE]... [--write-baseline] [--no-baseline]
+
+Paths default to ``src/repro``. Exit status: 0 when every finding is
+inline-suppressed or baselined, 1 otherwise, 2 on usage errors. The JSON
+report carries ``schema_version`` + git SHA provenance, matching the
+benchmark artifact convention (PR 6).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from . import (
+    ALL_RULES,
+    SCHEMA_VERSION,
+    analyze_paths,
+    filter_baselined,
+    load_baseline,
+    save_baseline,
+)
+from .core import git_sha
+
+DEFAULT_BASELINE = os.path.join("scripts", "analysis_baseline.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST-based static checks for the NBL serving stack.",
+    )
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files or directories (default: src/repro)")
+    ap.add_argument("--json", dest="json_out", default=None, metavar="FILE",
+                    help="write the full report (pre-baseline) as JSON")
+    ap.add_argument("--baseline", default=None, metavar="FILE",
+                    help="baseline file (default: scripts/analysis_baseline.json "
+                         "when present)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore any baseline file")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to the baseline file and exit 0")
+    ap.add_argument("--rule", action="append", default=None, choices=ALL_RULES,
+                    help="restrict to RULE (repeatable)")
+    args = ap.parse_args(argv)
+
+    root = os.getcwd()
+    paths = args.paths or [os.path.join("src", "repro")]
+    for p in paths:
+        if not os.path.exists(p):
+            print("repro.analysis: no such path: %s" % p, file=sys.stderr)
+            return 2
+
+    rules = set(args.rule) if args.rule else None
+    findings = analyze_paths(paths, root, rules=rules)
+
+    baseline_path = args.baseline or DEFAULT_BASELINE
+    if args.write_baseline:
+        save_baseline(baseline_path, findings)
+        print("repro.analysis: wrote %d finding(s) to %s"
+              % (len(findings), baseline_path))
+        return 0
+
+    baseline = set() if args.no_baseline else load_baseline(baseline_path)
+    fresh = filter_baselined(findings, baseline)
+    baselined = len(findings) - len(fresh)
+
+    if args.json_out:
+        report = {
+            "schema_version": SCHEMA_VERSION,
+            "git_sha": git_sha(root),
+            "paths": list(paths),
+            "counts": {
+                "total": len(findings),
+                "baselined": baselined,
+                "fresh": len(fresh),
+            },
+            "findings": [f.to_json() for f in findings],
+        }
+        outdir = os.path.dirname(args.json_out)
+        if outdir:
+            os.makedirs(outdir, exist_ok=True)
+        with open(args.json_out, "w", encoding="utf-8") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+
+    for f in fresh:
+        print(f.render())
+    if fresh:
+        print("repro.analysis: %d finding(s) (%d baselined)"
+              % (len(fresh), baselined), file=sys.stderr)
+        return 1
+    print("repro.analysis: clean (%d finding(s) baselined)" % baselined)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,471 @@
+"""Core machinery for ``repro.analysis``: findings, suppressions, project model.
+
+Everything here is stdlib-only (``ast`` + ``re`` + ``json``): the analyzer
+must be importable in the barest CI container, before jax or numpy.
+
+The pieces:
+
+- :class:`Finding` — one diagnostic. Baseline identity is the tuple
+  ``(rule, path, symbol, message)`` — deliberately line-INsensitive so an
+  unrelated edit above a baselined finding does not resurrect it.
+- :class:`SourceModule` — a parsed file: AST with parent links, physical
+  lines, and the structured-comment maps (``# nbl: disable=``,
+  ``# guarded-by:``, ``# host-sync:``).
+- :class:`Project` — the cross-module view: class registry, per-module
+  import maps, attribute typing mined from ``__init__`` bodies, and call
+  resolution (``self.m()``, ``self.attr.m()`` via typed attrs, imported
+  module-level functions). The guarded-by lock-order check and the
+  host-sync call graph both ride on this.
+- Baseline IO — load/save/filter against ``scripts/analysis_baseline.json``.
+
+Structured comment grammar (all parsed here, consumed by the passes):
+
+- ``# nbl: disable=<rule>[,<rule>...][ -- <reason>]`` — suppress the named
+  rules on this line (or, when the comment stands alone on its own line,
+  on the next line). ``jit-discipline`` suppressions REQUIRE a reason —
+  that is the "allowlist-with-reason"; a bare one does not suppress.
+- ``# guarded-by: <lock>`` — on a ``self.attr = ...`` line in ``__init__``:
+  every other read/write of ``self.attr`` in the class must sit lexically
+  inside ``with self.<lock>:``.
+- ``# host-sync: readback[ -- <reason>]`` — sanctions a device→host sync
+  on this line (or the next, when comment-only) as a deliberate per-step
+  readback point.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+import re
+import subprocess
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+SCHEMA_VERSION = 1
+
+#: Every rule the four passes can emit, for CLI validation and docs.
+ALL_RULES = (
+    "guarded-by",
+    "lock-order",
+    "jit-discipline",
+    "jit-retrace",
+    "host-sync",
+    "perf-counter",
+    "obs-hygiene",
+)
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*nbl:\s*disable=([a-z0-9,\-\s]+?)(?:\s*--\s*(.*?))?\s*$"
+)
+_GUARDED_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_][A-Za-z0-9_]*)\s*$")
+_HOSTSYNC_RE = re.compile(r"#\s*host-sync:\s*readback(?:\s*--\s*(.*?))?\s*$")
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str  # repo-relative, '/'-separated
+    line: int
+    symbol: str  # 'Class.method', 'func', or '<module>'
+    message: str
+
+    @property
+    def baseline_key(self) -> Tuple[str, str, str, str]:
+        return (self.rule, self.path, self.symbol, self.message)
+
+    def to_json(self) -> dict:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "symbol": self.symbol,
+            "message": self.message,
+        }
+
+    def render(self) -> str:
+        return "%s:%d: [%s] %s (%s)" % (
+            self.path, self.line, self.rule, self.message, self.symbol,
+        )
+
+
+@dataclass
+class Suppression:
+    rules: Tuple[str, ...]
+    reason: Optional[str]
+    comment_only: bool  # whole line is just the comment → applies to next line
+
+
+class SourceModule:
+    """One parsed source file plus its structured-comment maps."""
+
+    def __init__(self, path: str, text: str, rel: str):
+        self.path = path
+        self.rel = rel.replace(os.sep, "/")
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=path)
+        _link_parents(self.tree)
+        self.suppressions: Dict[int, Suppression] = {}
+        self.guarded_by: Dict[int, str] = {}  # line -> lock name
+        self.host_sync_ok: Dict[int, Optional[str]] = {}  # line -> reason
+        self._scan_comments()
+
+    # -- structured comments ------------------------------------------------
+    def _next_code_line(self, i: int) -> int:
+        """First non-blank, non-comment line after line ``i`` (1-indexed)."""
+        j = i + 1
+        while j <= len(self.lines):
+            stripped = self.lines[j - 1].strip()
+            if stripped and not stripped.startswith("#"):
+                return j
+            j += 1
+        return j
+
+    def _scan_comments(self) -> None:
+        for i, raw in enumerate(self.lines, start=1):
+            if "#" not in raw:
+                continue
+            comment_only = raw.lstrip().startswith("#")
+            m = _SUPPRESS_RE.search(raw)
+            if m:
+                rules = tuple(
+                    r.strip() for r in m.group(1).split(",") if r.strip()
+                )
+                s = Suppression(
+                    rules=rules, reason=m.group(2), comment_only=comment_only
+                )
+                # a comment-only directive covers the statement it precedes
+                at = self._next_code_line(i) if comment_only else i
+                self.suppressions.setdefault(at, s)
+            m = _GUARDED_RE.search(raw)
+            if m:
+                self.guarded_by[i] = m.group(1)
+            m = _HOSTSYNC_RE.search(raw)
+            if m:
+                at = self._next_code_line(i) if comment_only else i
+                self.host_sync_ok.setdefault(at, m.group(1))
+
+    def suppression_for(self, line: int, rule: str) -> Optional[Suppression]:
+        """The suppression covering ``line`` for ``rule``, if any."""
+        s = self.suppressions.get(line)
+        if s is not None and rule in s.rules:
+            return s
+        return None
+
+    def is_suppressed(self, line: int, rule: str) -> bool:
+        s = self.suppression_for(line, rule)
+        if s is None:
+            return False
+        # The jit allowlist is only an allowlist if it says WHY.
+        if rule == "jit-discipline" and not (s.reason and s.reason.strip()):
+            return False
+        return True
+
+    # -- convenience --------------------------------------------------------
+    def symbol_for(self, node: ast.AST) -> str:
+        parts: List[str] = []
+        cur = getattr(node, "_nbl_parent", None)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            parts.append(node.name)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                parts.append(cur.name)
+            cur = getattr(cur, "_nbl_parent", None)
+        return ".".join(reversed(parts)) or "<module>"
+
+    def enclosing_function(self, node: ast.AST):
+        cur = getattr(node, "_nbl_parent", None)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return cur
+            cur = getattr(cur, "_nbl_parent", None)
+        return None
+
+    def enclosing_class(self, node: ast.AST):
+        cur = getattr(node, "_nbl_parent", None)
+        while cur is not None:
+            if isinstance(cur, ast.ClassDef):
+                return cur
+            cur = getattr(cur, "_nbl_parent", None)
+        return None
+
+    def ancestors(self, node: ast.AST):
+        cur = getattr(node, "_nbl_parent", None)
+        while cur is not None:
+            yield cur
+            cur = getattr(cur, "_nbl_parent", None)
+
+
+def _link_parents(tree: ast.AST) -> None:
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            child._nbl_parent = parent  # type: ignore[attr-defined]
+
+
+# -- cross-module project model ---------------------------------------------
+
+@dataclass
+class ClassInfo:
+    name: str
+    module: SourceModule
+    node: ast.ClassDef
+    methods: Dict[str, ast.FunctionDef] = field(default_factory=dict)
+    #: attribute name -> candidate simple class names (mined from __init__;
+    #: candidates because 'Optional["Engine"]' yields both names and the
+    #: registry may not know either yet — resolve_call picks the first hit)
+    attr_types: Dict[str, Tuple[str, ...]] = field(default_factory=dict)
+    #: attribute name -> lock attr name (from # guarded-by: annotations)
+    guarded_attrs: Dict[str, str] = field(default_factory=dict)
+    #: lock attr name -> 'Lock' | 'RLock' (from threading.X() in __init__)
+    lock_kinds: Dict[str, str] = field(default_factory=dict)
+
+
+class Project:
+    """Cross-module context: classes, imports, typed attrs, call resolution."""
+
+    def __init__(self, modules: Sequence[SourceModule]):
+        self.modules = list(modules)
+        self.classes: Dict[str, ClassInfo] = {}
+        #: module rel-path -> {local name -> imported dotted target}
+        self.imports: Dict[str, Dict[str, str]] = {}
+        #: module rel-path -> {name -> FunctionDef} for module-level defs
+        self.module_funcs: Dict[str, Dict[str, ast.FunctionDef]] = {}
+        self._index()
+
+    # -- indexing ------------------------------------------------------------
+    def _index(self) -> None:
+        for mod in self.modules:
+            imap: Dict[str, str] = {}
+            funcs: Dict[str, ast.FunctionDef] = {}
+            for node in mod.tree.body:
+                if isinstance(node, ast.Import):
+                    for a in node.names:
+                        imap[a.asname or a.name.split(".")[0]] = a.name
+                elif isinstance(node, ast.ImportFrom) and node.module:
+                    for a in node.names:
+                        imap[a.asname or a.name] = node.module + "." + a.name
+                elif isinstance(node, ast.FunctionDef):
+                    funcs[node.name] = node
+                elif isinstance(node, ast.ClassDef):
+                    self._index_class(mod, node)
+            self.imports[mod.rel] = imap
+            self.module_funcs[mod.rel] = funcs
+
+    def _index_class(self, mod: SourceModule, node: ast.ClassDef) -> None:
+        info = ClassInfo(name=node.name, module=mod, node=node)
+        for item in node.body:
+            if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                info.methods[item.name] = item  # type: ignore[assignment]
+        init = info.methods.get("__init__")
+        if init is not None:
+            self._mine_init(info, init)
+        self.classes.setdefault(node.name, info)
+
+    def _mine_init(self, info: ClassInfo, init: ast.FunctionDef) -> None:
+        # Parameter annotations: name -> candidate class names from the
+        # annotation's AST (handles Optional["Scheduler"] etc.).
+        param_types: Dict[str, Tuple[str, ...]] = {}
+        args = list(init.args.args) + list(init.args.kwonlyargs)
+        for a in args:
+            if a.annotation is not None:
+                cands = tuple(_class_names_in(ast.dump(a.annotation)))
+                if cands:
+                    param_types[a.arg] = cands
+        for stmt in ast.walk(init):
+            if not isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                continue
+            targets = stmt.targets if isinstance(stmt, ast.Assign) else [stmt.target]
+            value = stmt.value
+            for tgt in targets:
+                if not (
+                    isinstance(tgt, ast.Attribute)
+                    and isinstance(tgt.value, ast.Name)
+                    and tgt.value.id == "self"
+                ):
+                    continue
+                attr = tgt.attr
+                lock = info.module.guarded_by.get(stmt.lineno)
+                if lock is not None:
+                    info.guarded_attrs[attr] = lock
+                t = self._value_type(value, param_types)
+                if t:
+                    info.attr_types[attr] = t
+                kind = _lock_kind(value)
+                if kind is not None:
+                    info.lock_kinds[attr] = kind
+
+    def _value_type(
+        self, value, param_types: Dict[str, Tuple[str, ...]]
+    ) -> Tuple[str, ...]:
+        if value is None:
+            return ()
+        if isinstance(value, ast.Call):
+            fn = value.func
+            name = fn.id if isinstance(fn, ast.Name) else (
+                fn.attr if isinstance(fn, ast.Attribute) else None
+            )
+            if name is not None and name[:1].isupper():
+                return (name,)
+        elif isinstance(value, ast.Name) and value.id in param_types:
+            return param_types[value.id]
+        elif isinstance(value, ast.BoolOp):
+            for v in value.values:
+                t = self._value_type(v, param_types)
+                if t:
+                    return t
+        elif isinstance(value, ast.IfExp):
+            for v in (value.body, value.orelse):
+                t = self._value_type(v, param_types)
+                if t:
+                    return t
+        return ()
+
+    # -- call resolution -----------------------------------------------------
+    def resolve_call(
+        self, mod: SourceModule, cls: Optional[ClassInfo], call: ast.Call
+    ) -> Optional[Tuple[SourceModule, ast.FunctionDef, str]]:
+        """Resolve ``call`` to (module, funcdef, qualname) when statically possible."""
+        fn = call.func
+        if isinstance(fn, ast.Attribute):
+            base = fn.value
+            if isinstance(base, ast.Name) and base.id == "self" and cls is not None:
+                target = cls.methods.get(fn.attr)
+                if target is not None:
+                    return (cls.module, target, "%s.%s" % (cls.name, fn.attr))
+            elif (
+                isinstance(base, ast.Attribute)
+                and isinstance(base.value, ast.Name)
+                and base.value.id == "self"
+                and cls is not None
+            ):
+                for tname in cls.attr_types.get(base.attr, ()):
+                    tinfo = self.classes.get(tname)
+                    if tinfo is None:
+                        continue
+                    target = tinfo.methods.get(fn.attr)
+                    if target is not None:
+                        return (
+                            tinfo.module,
+                            target,
+                            "%s.%s" % (tinfo.name, fn.attr),
+                        )
+        elif isinstance(fn, ast.Name):
+            local = self.module_funcs.get(mod.rel, {}).get(fn.id)
+            if local is not None:
+                return (mod, local, fn.id)
+            dotted = self.imports.get(mod.rel, {}).get(fn.id)
+            if dotted is not None:
+                hit = self._lookup_dotted(dotted)
+                if hit is not None:
+                    return hit
+        return None
+
+    def _lookup_dotted(
+        self, dotted: str
+    ) -> Optional[Tuple[SourceModule, ast.FunctionDef, str]]:
+        # 'repro.models.paging.span_pages' -> module src/repro/models/paging.py
+        parts = dotted.split(".")
+        name = parts[-1]
+        modpath = "/".join(parts[:-1]) + ".py"
+        for mod in self.modules:
+            if mod.rel.endswith(modpath):
+                fd = self.module_funcs.get(mod.rel, {}).get(name)
+                if fd is not None:
+                    return (mod, fd, name)
+        return None
+
+    def class_of_method(self, mod: SourceModule, func: ast.FunctionDef):
+        cnode = mod.enclosing_class(func)
+        if cnode is None:
+            return None
+        info = self.classes.get(cnode.name)
+        if info is not None and info.node is cnode:
+            return info
+        return None
+
+
+def _class_names_in(annotation_dump: str) -> List[str]:
+    # Class names referenced in an annotation's ast.dump — quoted forward
+    # refs show up as Constant values, plain names as Name ids.
+    return re.findall(r"(?:id|value)='([A-Z][A-Za-z0-9_]*)'", annotation_dump)
+
+
+def _lock_kind(value) -> Optional[str]:
+    if isinstance(value, ast.Call):
+        fn = value.func
+        if isinstance(fn, ast.Attribute) and fn.attr in ("Lock", "RLock"):
+            return fn.attr
+        if isinstance(fn, ast.Name) and fn.id in ("Lock", "RLock"):
+            return fn.id
+    return None
+
+
+# -- file collection ---------------------------------------------------------
+
+def collect_modules(paths: Sequence[str], root: str) -> List[SourceModule]:
+    """Parse every .py under ``paths`` (files or directories) into modules."""
+    files: List[str] = []
+    for p in paths:
+        ap = os.path.abspath(p)
+        if os.path.isfile(ap) and ap.endswith(".py"):
+            files.append(ap)
+        elif os.path.isdir(ap):
+            for dirpath, dirnames, filenames in os.walk(ap):
+                dirnames[:] = sorted(
+                    d for d in dirnames
+                    if d not in ("__pycache__", ".git", "out", ".venv")
+                )
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        files.append(os.path.join(dirpath, fn))
+    mods = []
+    for f in sorted(set(files)):
+        rel = os.path.relpath(f, root)
+        with open(f, "r", encoding="utf-8") as fh:
+            text = fh.read()
+        mods.append(SourceModule(f, text, rel))
+    return mods
+
+
+# -- baseline ----------------------------------------------------------------
+
+def load_baseline(path: str) -> Set[Tuple[str, str, str, str]]:
+    if not os.path.exists(path):
+        return set()
+    with open(path, "r", encoding="utf-8") as fh:
+        data = json.load(fh)
+    keys = set()
+    for f in data.get("findings", []):
+        keys.add((f["rule"], f["path"], f["symbol"], f["message"]))
+    return keys
+
+
+def save_baseline(path: str, findings: Sequence[Finding]) -> None:
+    data = {
+        "schema_version": SCHEMA_VERSION,
+        "findings": [f.to_json() for f in sorted(
+            findings, key=lambda f: (f.path, f.rule, f.line)
+        )],
+    }
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(data, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+def filter_baselined(
+    findings: Sequence[Finding], baseline: Set[Tuple[str, str, str, str]]
+) -> List[Finding]:
+    return [f for f in findings if f.baseline_key not in baseline]
+
+
+def git_sha(root: str) -> Optional[str]:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=root,
+            capture_output=True, text=True, timeout=10,
+        )
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except Exception:
+        pass
+    return None

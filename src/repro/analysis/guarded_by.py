@@ -1,0 +1,225 @@
+"""Pass 1: lock discipline.
+
+``guarded-by`` — an attribute annotated ``# guarded-by: <lock>`` on its
+``__init__`` assignment must only be touched (read, written, deleted,
+subscripted) lexically inside ``with self.<lock>:`` anywhere else in the
+class. ``__init__`` itself is exempt: the object is not yet shared.
+
+``lock-order`` — build each method's transitive lock-acquire set (through
+``self.m()`` calls, typed-attribute calls like ``self.engine.submit()``,
+and imported module-level functions), derive held→acquired edges, and
+flag cycles. Re-acquiring an ``RLock`` you already hold is legal (that is
+why ``AsyncEngine._lock`` is an RLock); a plain ``Lock`` self-edge is a
+guaranteed deadlock and any multi-lock cycle is a potential one.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .core import ClassInfo, Finding, Project, SourceModule
+
+
+def run(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for info in project.classes.values():
+        if info.guarded_attrs:
+            findings.extend(_check_guarded(info))
+    findings.extend(_check_lock_order(project))
+    return findings
+
+
+# -- guarded-by --------------------------------------------------------------
+
+def _check_guarded(info: ClassInfo) -> List[Finding]:
+    mod = info.module
+    out: List[Finding] = []
+    init = info.methods.get("__init__")
+    for node in ast.walk(info.node):
+        if not (
+            isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"
+            and node.attr in info.guarded_attrs
+        ):
+            continue
+        func = mod.enclosing_function(node)
+        if func is init:
+            continue
+        # Accessing the attr in a nested class is out of scope for this class.
+        if mod.enclosing_class(node) is not info.node:
+            continue
+        lock = info.guarded_attrs[node.attr]
+        if _inside_with_lock(mod, node, lock):
+            continue
+        out.append(Finding(
+            rule="guarded-by",
+            path=mod.rel,
+            line=node.lineno,
+            symbol=mod.symbol_for(node),
+            message="self.%s is guarded by self.%s but accessed outside "
+                    "'with self.%s:'" % (node.attr, lock, lock),
+        ))
+    return out
+
+
+def _inside_with_lock(mod: SourceModule, node: ast.AST, lock: str) -> bool:
+    for anc in mod.ancestors(node):
+        if isinstance(anc, (ast.With, ast.AsyncWith)):
+            for item in anc.items:
+                if _is_self_attr(item.context_expr, lock):
+                    return True
+    return False
+
+
+def _is_self_attr(expr: ast.AST, attr: str) -> bool:
+    return (
+        isinstance(expr, ast.Attribute)
+        and expr.attr == attr
+        and isinstance(expr.value, ast.Name)
+        and expr.value.id == "self"
+    )
+
+
+# -- lock-order --------------------------------------------------------------
+
+def _check_lock_order(project: Project) -> List[Finding]:
+    # Transitive acquire sets per (class, method) / module function, to a
+    # fixpoint over the resolvable call graph. Locks are qualified as
+    # 'Class.lockattr' so the order graph spans classes.
+    FnKey = Tuple[str, str]  # (module rel, qualname)
+    direct: Dict[FnKey, Set[str]] = {}
+    calls: Dict[FnKey, List[FnKey]] = {}
+    nodes: Dict[FnKey, Tuple[SourceModule, Optional[ClassInfo], ast.FunctionDef]] = {}
+
+    def _locks_of(cls: Optional[ClassInfo], expr: ast.AST) -> Optional[str]:
+        if cls is None or not isinstance(expr, ast.Attribute):
+            return None
+        if not (isinstance(expr.value, ast.Name) and expr.value.id == "self"):
+            return None
+        if expr.attr in cls.lock_kinds:
+            return "%s.%s" % (cls.name, expr.attr)
+        return None
+
+    for mod in project.modules:
+        for fnode in ast.walk(mod.tree):
+            if not isinstance(fnode, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            cls = project.class_of_method(mod, fnode)
+            key = (mod.rel, mod.symbol_for(fnode))
+            nodes[key] = (mod, cls, fnode)
+            acq: Set[str] = set()
+            callees: List[FnKey] = []
+            for sub in ast.walk(fnode):
+                if isinstance(sub, (ast.With, ast.AsyncWith)):
+                    for item in sub.items:
+                        lk = _locks_of(cls, item.context_expr)
+                        if lk is not None:
+                            acq.add(lk)
+                elif isinstance(sub, ast.Call):
+                    hit = project.resolve_call(mod, cls, sub)
+                    if hit is not None:
+                        tmod, tfn, _ = hit
+                        callees.append((tmod.rel, tmod.symbol_for(tfn)))
+            direct[key] = acq
+            calls[key] = callees
+
+    trans: Dict[FnKey, Set[str]] = {k: set(v) for k, v in direct.items()}
+    changed = True
+    while changed:
+        changed = False
+        for key, callees in calls.items():
+            before = len(trans[key])
+            for c in callees:
+                trans[key] |= trans.get(c, set())
+            if len(trans[key]) != before:
+                changed = True
+
+    # Edges: while lexically holding A, a nested acquire (direct or through
+    # a resolvable call) of B gives A -> B. Witness line kept per edge.
+    edges: Dict[Tuple[str, str], Tuple[str, int, str]] = {}
+    rlocks = {
+        "%s.%s" % (info.name, attr)
+        for info in project.classes.values()
+        for attr, kind in info.lock_kinds.items()
+        if kind == "RLock"
+    }
+
+    for key, (mod, cls, fnode) in nodes.items():
+        for sub in ast.walk(fnode):
+            if not isinstance(sub, (ast.With, ast.AsyncWith)):
+                continue
+            held = [
+                lk for item in sub.items
+                for lk in [_locks_of(cls, item.context_expr)]
+                if lk is not None
+            ]
+            if not held:
+                continue
+            for inner in ast.walk(sub):
+                if inner is sub:
+                    continue
+                acquired: Set[str] = set()
+                line = getattr(inner, "lineno", sub.lineno)
+                if isinstance(inner, (ast.With, ast.AsyncWith)):
+                    for item in inner.items:
+                        lk = _locks_of(cls, item.context_expr)
+                        if lk is not None:
+                            acquired.add(lk)
+                elif isinstance(inner, ast.Call):
+                    hit = project.resolve_call(mod, cls, inner)
+                    if hit is not None:
+                        tmod, tfn, _ = hit
+                        acquired |= trans.get((tmod.rel, tmod.symbol_for(tfn)), set())
+                for a in held:
+                    for b in acquired:
+                        if (a, b) not in edges:
+                            edges[(a, b)] = (mod.rel, line, mod.symbol_for(sub))
+
+    out: List[Finding] = []
+    for (a, b), (rel, line, symbol) in sorted(edges.items()):
+        if a == b:
+            if a not in rlocks:
+                out.append(Finding(
+                    rule="lock-order", path=rel, line=line, symbol=symbol,
+                    message="plain Lock %s re-acquired while held "
+                            "(self-deadlock; use RLock or drop the lock "
+                            "before the call)" % a,
+                ))
+
+    # Multi-lock cycles via DFS over distinct-lock edges.
+    graph: Dict[str, Set[str]] = {}
+    for (a, b) in edges:
+        if a != b:
+            graph.setdefault(a, set()).add(b)
+    for cycle in _find_cycles(graph):
+        a = cycle[0]
+        rel, line, symbol = edges[(a, cycle[1])]
+        out.append(Finding(
+            rule="lock-order", path=rel, line=line, symbol=symbol,
+            message="lock acquisition cycle: %s" % " -> ".join(cycle + [a]),
+        ))
+    return out
+
+
+def _find_cycles(graph: Dict[str, Set[str]]) -> List[List[str]]:
+    cycles: List[List[str]] = []
+    seen_cycles: Set[Tuple[str, ...]] = set()
+
+    def dfs(node: str, path: List[str], on_path: Set[str]) -> None:
+        for nxt in sorted(graph.get(node, ())):
+            if nxt in on_path:
+                i = path.index(nxt)
+                cyc = path[i:]
+                # Canonical rotation so each cycle reports once.
+                j = cyc.index(min(cyc))
+                canon = tuple(cyc[j:] + cyc[:j])
+                if canon not in seen_cycles:
+                    seen_cycles.add(canon)
+                    cycles.append(list(canon))
+            else:
+                dfs(nxt, path + [nxt], on_path | {nxt})
+
+    for start in sorted(graph):
+        dfs(start, [start], {start})
+    return cycles

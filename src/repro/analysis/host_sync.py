@@ -1,0 +1,154 @@
+"""Pass 3: hot-path host syncs and the perf-counter confinement rule.
+
+``host-sync`` — build the call graph reachable from ``Engine._step_impl``
+(through ``self.m()``, typed-attribute calls like ``self.allocator.free()``,
+and imported module-level functions) and flag device→host synchronization
+points inside it: ``.item()``, ``.block_until_ready()``, ``jax.device_get``
+/ ``jax.block_until_ready``, ``np.asarray`` / ``np.array`` (numpy forces a
+device fetch on a jax array), and ``float(...)`` on a non-literal. The
+engine's deliberate once-per-step logits readbacks are marked in source
+with ``# host-sync: readback -- <why>`` and skipped; anything else is a
+stall the step timeline (PR 6) would book as host time.
+
+``perf-counter`` — ``time.perf_counter`` may only be referenced under
+``src/repro/obs/`` (which exports it as ``repro.obs.clock``). This is the
+AST replacement for the grep lint PR 6 put in ``ci.sh``: one timebase,
+owned by the observability layer, no ad-hoc timing scattered through the
+tree.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set, Tuple
+
+from .core import Finding, Project, SourceModule
+
+DEFAULT_ENTRY = "Engine._step_impl"
+
+_SYNC_METHODS = {"item", "block_until_ready"}
+_NUMPY_SYNC_FUNCS = {"asarray", "array", "ascontiguousarray"}
+_JAX_SYNC_FUNCS = {"device_get", "block_until_ready"}
+
+
+def run(project: Project, entry: str = DEFAULT_ENTRY) -> List[Finding]:
+    out: List[Finding] = []
+    reachable = _reachable_from(project, entry)
+    for (mod, cls_name, func), qual in reachable:
+        out.extend(_scan_function(project, mod, func, qual))
+    out.extend(_perf_counter_scan(project))
+    return out
+
+
+# -- reachability ------------------------------------------------------------
+
+def _reachable_from(project: Project, entry: str):
+    """BFS over the resolvable call graph from ``entry`` ('Class.method')."""
+    cls_name, _, meth = entry.partition(".")
+    info = project.classes.get(cls_name)
+    if info is None or meth not in info.methods:
+        return []
+    start = (info.module, info, info.methods[meth])
+    seen: Set[Tuple[str, str]] = set()
+    order = []
+    stack = [(start, entry)]
+    while stack:
+        (mod, cls, func), qual = stack.pop()
+        key = (mod.rel, qual)
+        if key in seen:
+            continue
+        seen.add(key)
+        order.append(((mod, cls.name if cls else None, func), qual))
+        for sub in ast.walk(func):
+            if not isinstance(sub, ast.Call):
+                continue
+            hit = project.resolve_call(mod, cls, sub)
+            if hit is None:
+                continue
+            tmod, tfn, tqual = hit
+            tcls = project.class_of_method(tmod, tfn)
+            stack.append(((tmod, tcls, tfn), tqual))
+    return order
+
+
+# -- sync detection ----------------------------------------------------------
+
+def _scan_function(
+    project: Project, mod: SourceModule, func: ast.FunctionDef, qual: str
+) -> List[Finding]:
+    out: List[Finding] = []
+    imap = project.imports.get(mod.rel, {})
+
+    def _module_of(name: str) -> Optional[str]:
+        return imap.get(name)
+
+    for node in ast.walk(func):
+        if not isinstance(node, ast.Call):
+            continue
+        desc = None
+        fn = node.func
+        if isinstance(fn, ast.Attribute):
+            if fn.attr in _SYNC_METHODS and not isinstance(fn.value, ast.Name):
+                desc = ".%s()" % fn.attr
+            elif fn.attr in _SYNC_METHODS and isinstance(fn.value, ast.Name):
+                base = _module_of(fn.value.id)
+                if base is None:  # a value, not a module alias
+                    desc = ".%s()" % fn.attr
+            if desc is None and isinstance(fn.value, ast.Name):
+                base = _module_of(fn.value.id)
+                if base == "numpy" and fn.attr in _NUMPY_SYNC_FUNCS:
+                    desc = "np.%s()" % fn.attr
+                elif base == "jax" and fn.attr in _JAX_SYNC_FUNCS:
+                    desc = "jax.%s()" % fn.attr
+        elif isinstance(fn, ast.Name) and fn.id == "float":
+            if node.args and not isinstance(node.args[0], ast.Constant):
+                desc = "float() on a non-literal"
+        if desc is None:
+            continue
+        if node.lineno in mod.host_sync_ok:
+            continue
+        out.append(Finding(
+            rule="host-sync",
+            path=mod.rel,
+            line=node.lineno,
+            symbol=qual,
+            message="device->host sync %s reachable from the step path; move "
+                    "off the hot path or sanction with '# host-sync: "
+                    "readback -- <why>'" % desc,
+        ))
+    return out
+
+
+# -- perf-counter confinement -------------------------------------------------
+
+def _perf_counter_scan(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in project.modules:
+        if "/obs/" in "/" + mod.rel or mod.rel.startswith("obs/"):
+            continue
+        imap = project.imports.get(mod.rel, {})
+        for node in ast.walk(mod.tree):
+            hit = False
+            if (
+                isinstance(node, ast.Attribute)
+                and node.attr == "perf_counter"
+                and isinstance(node.value, ast.Name)
+                and imap.get(node.value.id, "").startswith("time")
+            ):
+                hit = True
+            elif (
+                isinstance(node, ast.Name)
+                and node.id == "perf_counter"
+                and imap.get("perf_counter", "") == "time.perf_counter"
+                and isinstance(getattr(node, "ctx", None), ast.Load)
+            ):
+                hit = True
+            if hit:
+                out.append(Finding(
+                    rule="perf-counter",
+                    path=mod.rel,
+                    line=node.lineno,
+                    symbol=mod.symbol_for(node),
+                    message="time.perf_counter referenced outside "
+                            "src/repro/obs/; use repro.obs.clock",
+                ))
+    return out

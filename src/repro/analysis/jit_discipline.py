@@ -1,0 +1,271 @@
+"""Pass 2: jit discipline and retrace hazards.
+
+``jit-discipline`` — a ``jax.jit`` construction site is sanctioned when it
+is (a) module/class level (built once per import — decorators and
+module-level assignments), (b) lexically inside a ``shared_jit`` /
+``_shared_jit`` call (the process-wide registry in ``repro.jitcache``),
+or (c) carries ``# nbl: disable=jit-discipline -- <reason>`` — the reason
+is mandatory; a bare suppression does not count. Anything else builds a
+fresh traced wrapper per call of the enclosing function, which is the
+silent retrace/recompile tax PR 4 paid before ``_SHARED_JITS`` existed.
+
+``jit-retrace`` — hazards that defeat jax's trace cache even for a
+correctly shared wrapper:
+
+- a raw ``jax.jit`` built inside a ``for``/``while`` loop (a fresh cache
+  per iteration; ``shared_jit`` in a loop is fine, it's a registry hit);
+- a list/dict/set literal passed to a parameter a local jitted function
+  declares in ``static_argnames``/``static_argnums`` (statics must hash);
+- a loop-variable-dependent slice fed straight into a known-jitted
+  callable inside the loop (every iteration is a new shape → a new
+  trace; bucket the shape first).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from .core import Finding, Project, SourceModule
+
+_SHARED_NAMES = {"shared_jit", "_shared_jit"}
+
+
+def run(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in project.modules:
+        out.extend(_check_module(mod))
+    return out
+
+
+def _check_module(mod: SourceModule) -> List[Finding]:
+    out: List[Finding] = []
+    jit_sites = [n for n in ast.walk(mod.tree) if _is_jit_ref(mod, n)]
+    jitted_names = _jitted_local_names(mod)
+    static_params = _static_param_map(mod)
+
+    for node in jit_sites:
+        in_shared = _inside_shared_call(mod, node)
+        func = _enclosing_runtime_function(mod, node)
+        if func is not None and not in_shared:
+            out.append(Finding(
+                rule="jit-discipline",
+                path=mod.rel,
+                line=node.lineno,
+                symbol=mod.symbol_for(node),
+                message="jax.jit built in function scope (fresh wrapper per "
+                        "call); route through repro.jitcache.shared_jit or "
+                        "allowlist with '# nbl: disable=jit-discipline -- "
+                        "<reason>'",
+            ))
+        if not in_shared and _inside_loop(mod, node):
+            out.append(Finding(
+                rule="jit-retrace",
+                path=mod.rel,
+                line=node.lineno,
+                symbol=mod.symbol_for(node),
+                message="jax.jit built inside a loop: every iteration traces "
+                        "from scratch",
+            ))
+
+    for call in ast.walk(mod.tree):
+        if not isinstance(call, ast.Call):
+            continue
+        name = _call_name(call)
+        if name in static_params:
+            statics = static_params[name]
+            for kw in call.keywords:
+                if kw.arg in statics and isinstance(
+                    kw.value, (ast.List, ast.Dict, ast.Set)
+                ):
+                    out.append(Finding(
+                        rule="jit-retrace",
+                        path=mod.rel,
+                        line=call.lineno,
+                        symbol=mod.symbol_for(call),
+                        message="unhashable %s literal passed to static arg "
+                                "'%s' of jitted '%s'" % (
+                                    type(kw.value).__name__.lower(), kw.arg, name,
+                                ),
+                    ))
+        if name in jitted_names:
+            loop_var = _enclosing_loop_var(mod, call)
+            if loop_var is not None and _has_loopvar_slice_arg(call, loop_var):
+                out.append(Finding(
+                    rule="jit-retrace",
+                    path=mod.rel,
+                    line=call.lineno,
+                    symbol=mod.symbol_for(call),
+                    message="loop-variable-dependent slice shape flows into "
+                            "jitted '%s' inside the loop (one trace per "
+                            "iteration; bucket the shape)" % name,
+                ))
+    return out
+
+
+# -- jit site identification -------------------------------------------------
+
+def _is_jit_ref(mod: SourceModule, node: ast.AST) -> bool:
+    # jax.jit as an attribute, or a bare `jit` imported from jax.
+    if isinstance(node, ast.Attribute) and node.attr == "jit":
+        if isinstance(node.value, ast.Name) and node.value.id == "jax":
+            return True
+    if isinstance(node, ast.Name) and node.id == "jit":
+        return _imports_jax_jit(mod, node.id)
+    return False
+
+
+def _imports_jax_jit(mod: SourceModule, name: str) -> bool:
+    for stmt in mod.tree.body:
+        if isinstance(stmt, ast.ImportFrom) and stmt.module == "jax":
+            for a in stmt.names:
+                if (a.asname or a.name) == name and a.name == "jit":
+                    return True
+    return False
+
+
+def _enclosing_runtime_function(mod: SourceModule, node: ast.AST):
+    """Nearest enclosing function whose BODY contains ``node``.
+
+    A jit reference inside a decorator list runs at class/module definition
+    time, not per call — so a decorator position does not count as being
+    inside that function (or inside a method's class scope).
+    """
+    child = node
+    for anc in mod.ancestors(node):
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            in_decorator = any(
+                child is d or _contains(d, child) for d in anc.decorator_list
+            )
+            if not in_decorator:
+                return anc
+        if isinstance(anc, ast.ClassDef):
+            # Class body (incl. method decorators) executes once per import.
+            pass
+        child = anc
+    return None
+
+
+def _contains(tree: ast.AST, target: ast.AST) -> bool:
+    return any(n is target for n in ast.walk(tree))
+
+
+def _inside_shared_call(mod: SourceModule, node: ast.AST) -> bool:
+    for anc in mod.ancestors(node):
+        if isinstance(anc, ast.Call) and _call_name(anc) in _SHARED_NAMES:
+            return True
+    return False
+
+
+def _inside_loop(mod: SourceModule, node: ast.AST) -> bool:
+    # Only loops within the same function scope count: a def inside a loop
+    # body doesn't re-run per iteration unless called there (the function-
+    # scope rule already covers that).
+    for anc in mod.ancestors(node):
+        if isinstance(anc, (ast.For, ast.AsyncFor, ast.While)):
+            return True
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            return False
+    return False
+
+
+def _call_name(call: ast.Call) -> Optional[str]:
+    fn = call.func
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return None
+
+
+# -- local jitted-name / static-param maps ------------------------------------
+
+def _jitted_local_names(mod: SourceModule) -> Set[str]:
+    names: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_decorator_is_jit(mod, d) for d in node.decorator_list):
+                names.add(node.name)
+        elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            vname = _call_name(node.value)
+            is_jit = _is_jit_ref(mod, node.value.func) or vname in _SHARED_NAMES
+            if is_jit:
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        names.add(tgt.id)
+    return names
+
+
+def _decorator_is_jit(mod: SourceModule, dec: ast.AST) -> bool:
+    if _is_jit_ref(mod, dec):
+        return True
+    if isinstance(dec, ast.Call):
+        if _is_jit_ref(mod, dec.func):
+            return True
+        # functools.partial(jax.jit, ...)
+        if _call_name(dec) == "partial" and dec.args:
+            return _is_jit_ref(mod, dec.args[0])
+    return False
+
+
+def _static_names_of(call: ast.Call) -> Set[str]:
+    statics: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.Constant) and isinstance(
+                    sub.value, str
+                ):
+                    statics.add(sub.value)
+    return statics
+
+
+def _static_param_map(mod: SourceModule) -> Dict[str, Set[str]]:
+    """name -> declared static_argnames for locally defined jitted functions
+    (both the ``@jax.jit(static_argnames=...)`` decorator form and the
+    ``g = jax.jit(fn, static_argnames=...)`` assignment form)."""
+    out: Dict[str, Set[str]] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if not (isinstance(dec, ast.Call)
+                        and _decorator_is_jit(mod, dec)):
+                    continue
+                statics = _static_names_of(dec)
+                if statics:
+                    out[node.name] = statics
+        elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            if not _is_jit_ref(mod, node.value.func):
+                continue
+            statics = _static_names_of(node.value)
+            if statics:
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        out[tgt.id] = statics
+    return out
+
+
+# -- loop-shape hazard --------------------------------------------------------
+
+def _enclosing_loop_var(mod: SourceModule, node: ast.AST) -> Optional[str]:
+    for anc in mod.ancestors(node):
+        if isinstance(anc, (ast.For, ast.AsyncFor)):
+            if isinstance(anc.target, ast.Name):
+                return anc.target.id
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return None
+    return None
+
+
+def _has_loopvar_slice_arg(call: ast.Call, loop_var: str) -> bool:
+    for arg in list(call.args) + [kw.value for kw in call.keywords]:
+        for sub in ast.walk(arg):
+            if isinstance(sub, ast.Subscript):
+                sl = sub.slice
+                if isinstance(sl, ast.Slice):
+                    for bound in (sl.lower, sl.upper, sl.step):
+                        if bound is None:
+                            continue
+                        for n in ast.walk(bound):
+                            if isinstance(n, ast.Name) and n.id == loop_var:
+                                return True
+    return False

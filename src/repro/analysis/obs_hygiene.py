@@ -1,0 +1,206 @@
+"""Pass 4: obs-hook hygiene.
+
+The observability layer's overhead contract (docs/observability.md) is
+structural: every hook call site is guarded by an ``is not None`` branch,
+so running with ``obs=None`` costs one pointer compare and zero dispatch.
+This pass keeps that contract honest — any call through an ``obs``
+attribute chain (``self.obs.on_token(...)``, ``eng.obs.tracer.export()``),
+through a local alias assigned from one (``o = eng.obs``), or through a
+parameter/variable named ``obs``, must sit under a guard:
+
+- ``if <obs> is not None:`` (call in the body), or ``if <obs> is None:``
+  with the call in the else branch;
+- a conditional expression ``X if <obs> is not None else Y`` (the engine's
+  ``annotate(...) if self.obs is not None else _NULLCTX`` pattern);
+- short-circuit ``<obs> is not None and <obs>.hook(...)``;
+- an early return: a preceding top-of-function ``if <obs> is None:
+  return/raise/continue``.
+
+Constructing ``Observability(...)`` locally and calling it is fine — a
+fresh instance can't be None; the pass only tracks obs-typed *references*.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from .core import Finding, Project, SourceModule
+
+
+def run(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in project.modules:
+        out.extend(_check_module(mod))
+    return out
+
+
+def _check_module(mod: SourceModule) -> List[Finding]:
+    out: List[Finding] = []
+    for scope in ast.walk(mod.tree):
+        if not isinstance(scope, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        aliases = _obs_aliases(scope)
+        if _constructs_obs(scope):
+            # Locally constructed instances are never None; aliases of the
+            # construction would need flow analysis — skip the scope's bare
+            # names and keep checking explicit .obs chains only.
+            bare_names: Set[str] = set()
+        else:
+            bare_names = aliases | ({"obs"} if _has_obs_param(scope) else set())
+        for node in ast.walk(scope):
+            if not isinstance(node, ast.Call):
+                continue
+            if mod.enclosing_function(node) is not scope:
+                continue
+            target = _obs_target(node, bare_names)
+            if target is None:
+                continue
+            if _is_guarded(mod, scope, node, bare_names):
+                continue
+            out.append(Finding(
+                rule="obs-hygiene",
+                path=mod.rel,
+                line=node.lineno,
+                symbol=mod.symbol_for(node),
+                message="obs hook call '%s' not guarded by an "
+                        "'is not None' branch" % target,
+            ))
+    return out
+
+
+# -- what counts as an obs call ----------------------------------------------
+
+def _obs_target(call: ast.Call, bare_names: Set[str]) -> Optional[str]:
+    """A dotted rendering of the callee when it goes through obs, else None."""
+    fn = call.func
+    if not isinstance(fn, ast.Attribute):
+        return None
+    parts: List[str] = [fn.attr]
+    cur = fn.value
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+    parts.reverse()
+    base = parts[:-1]  # everything but the method name
+    if "obs" in base or (parts and parts[0] in bare_names):
+        return ".".join(parts) + "()"
+    return None
+
+
+def _obs_aliases(scope: ast.AST) -> Set[str]:
+    """Local names assigned from an expression that dereferences ``.obs``."""
+    names: Set[str] = set()
+    for node in ast.walk(scope):
+        if isinstance(node, ast.Assign) and _mentions_obs(node.value, set()):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    names.add(tgt.id)
+    return names
+
+
+def _has_obs_param(scope) -> bool:
+    args = scope.args
+    every = (
+        list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs)
+    )
+    return any(a.arg == "obs" for a in every)
+
+
+def _constructs_obs(scope: ast.AST) -> bool:
+    for node in ast.walk(scope):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            fn = node.value.func
+            name = fn.id if isinstance(fn, ast.Name) else (
+                fn.attr if isinstance(fn, ast.Attribute) else None
+            )
+            if name == "Observability":
+                return True
+    return False
+
+
+def _mentions_obs(expr: ast.AST, bare_names: Set[str]) -> bool:
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Attribute) and node.attr == "obs":
+            return True
+        if isinstance(node, ast.Name) and (
+            node.id == "obs" or node.id in bare_names
+        ):
+            return True
+    return False
+
+
+# -- guard detection ----------------------------------------------------------
+
+def _is_guarded(
+    mod: SourceModule, scope, node: ast.Call, bare_names: Set[str]
+) -> bool:
+    child: ast.AST = node
+    for anc in mod.ancestors(node):
+        if anc is scope:
+            break
+        if isinstance(anc, ast.If):
+            kind = _none_check(anc.test, bare_names)
+            in_body = any(_contains(s, child) for s in anc.body)
+            if kind == "not-none" and in_body:
+                return True
+            if kind == "none" and not in_body:
+                return True
+        elif isinstance(anc, ast.IfExp):
+            kind = _none_check(anc.test, bare_names)
+            if kind == "not-none" and _contains(anc.body, node):
+                return True
+            if kind == "none" and _contains(anc.orelse, node):
+                return True
+        elif isinstance(anc, ast.BoolOp) and isinstance(anc.op, ast.And):
+            idx = next(
+                (i for i, v in enumerate(anc.values) if _contains(v, node)), None
+            )
+            if idx is not None:
+                for earlier in anc.values[:idx]:
+                    if _none_check(earlier, bare_names) == "not-none":
+                        return True
+        child = anc
+    return _early_return_guard(scope, node, bare_names)
+
+
+def _none_check(test: ast.AST, bare_names: Set[str]) -> Optional[str]:
+    """'not-none' / 'none' when ``test`` none-checks an obs expression."""
+    for sub in ast.walk(test):
+        if not isinstance(sub, ast.Compare) or len(sub.ops) != 1:
+            continue
+        lhs, rhs = sub.left, sub.comparators[0]
+        operand = lhs if not _is_none(lhs) else rhs
+        if not (_is_none(lhs) or _is_none(rhs)):
+            continue
+        if not _mentions_obs(operand, bare_names):
+            continue
+        if isinstance(sub.ops[0], ast.IsNot):
+            return "not-none"
+        if isinstance(sub.ops[0], ast.Is):
+            return "none"
+    return None
+
+
+def _is_none(expr: ast.AST) -> bool:
+    return isinstance(expr, ast.Constant) and expr.value is None
+
+
+def _contains(tree: ast.AST, target: ast.AST) -> bool:
+    return tree is target or any(n is target for n in ast.walk(tree))
+
+
+def _early_return_guard(scope, node: ast.Call, bare_names: Set[str]) -> bool:
+    for stmt in scope.body:
+        if getattr(stmt, "lineno", 1 << 30) >= node.lineno:
+            break
+        if not isinstance(stmt, ast.If):
+            continue
+        if _none_check(stmt.test, bare_names) != "none":
+            continue
+        if any(
+            isinstance(s, (ast.Return, ast.Raise, ast.Continue)) for s in stmt.body
+        ):
+            return True
+    return False

@@ -12,6 +12,7 @@ DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Callable, Iterable, Optional, Sequence
 
 import jax
@@ -20,7 +21,15 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import cca, lmmse
 from repro.core.moments import finalize, init_moments, update_moments
+from repro.jitcache import shared_jit
 from repro.models.transformer import forward_with_taps
+
+
+def _moment_step(cfg: ModelConfig, tap_block: bool, p, tokens, enc, moms):
+    _, taps = forward_with_taps(cfg, p, tokens, enc=enc,
+                                tap_layers=tuple(moms.keys()),
+                                tap_block=tap_block)
+    return {i: update_moments(moms[i], *taps[i]) for i in moms}
 
 
 @dataclasses.dataclass
@@ -61,12 +70,11 @@ def calibrate(cfg: ModelConfig, params: dict,
     layers = list(layers if layers is not None else candidate_layers(cfg))
     d = cfg.d_model
 
-    @jax.jit
-    def step(p, tokens, enc, moms):
-        _, taps = forward_with_taps(cfg, p, tokens, enc=enc,
-                                    tap_layers=tuple(moms.keys()),
-                                    tap_block=tap_block)
-        return {i: update_moments(moms[i], *taps[i]) for i in moms}
+    # shared across calls (the moms dict's KEYS are pytree structure, so
+    # each layer chunk gets its own entry in the wrapper's trace cache —
+    # exactly what re-running calibrate over sweeps wants to reuse)
+    step = shared_jit(("calibrate.step", cfg, bool(tap_block)),
+                      lambda: jax.jit(partial(_moment_step, cfg, tap_block)))
 
     results: dict[int, LayerCalib] = {}
     for c0 in range(0, len(layers), chunk_layers):

@@ -65,7 +65,7 @@ def lora_finetune(cfg: ModelConfig, params: dict,
         return params
     opt = adamw_init(lora)
 
-    @jax.jit
+    @jax.jit  # nbl: disable=jit-discipline -- closes over THIS run's params (arrays); a shared wrapper would pin stale weights across runs
     def step(lo, op, batch, i):
         def f(lo):
             return loss_fn(cfg, lora_apply(cfg, params, lo), batch,

@@ -8,6 +8,7 @@ accuracy (the learnable structure of the Zipf–Markov stream)."""
 from __future__ import annotations
 
 import math
+from functools import partial
 from typing import Callable
 
 import jax
@@ -15,16 +16,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.jitcache import shared_jit
 from repro.models import loss_fn, apply
+
+
+def _ppl_step(cfg: ModelConfig, p, batch):
+    _, m = loss_fn(cfg, p, batch, remat=False)
+    return m["ce"] * m["ntokens"], m["ntokens"]
+
+
+def _succ_step(cfg: ModelConfig, p, tokens):
+    logits, _ = apply(cfg, p, tokens)
+    return jnp.argmax(logits, axis=-1)
 
 
 def perplexity(cfg: ModelConfig, params: dict,
                data_factory: Callable) -> float:
-    @jax.jit
-    def step(p, batch):
-        _, m = loss_fn(cfg, p, batch, remat=False)
-        return m["ce"] * m["ntokens"], m["ntokens"]
-
+    # shared across calls: eval sweeps score every (m, layer-set) variant
+    # of the SAME architecture, and cfg is the whole closure
+    step = shared_jit(("eval.ppl", cfg),
+                      lambda: jax.jit(partial(_ppl_step, cfg)))
     tot, n = 0.0, 0.0
     for batch in data_factory():
         ce, nt = step(params, batch)
@@ -38,11 +49,8 @@ def successor_accuracy(cfg: ModelConfig, params: dict,
     """Fraction of positions where the model's argmax equals the Markov
     successor — a crisp 'did compression preserve the learned structure'
     probe (higher = better)."""
-    @jax.jit
-    def step(p, tokens):
-        logits, _ = apply(cfg, p, tokens)
-        return jnp.argmax(logits, axis=-1)
-
+    step = shared_jit(("eval.succ", cfg),
+                      lambda: jax.jit(partial(_succ_step, cfg)))
     hit, n = 0, 0
     for batch in data_factory():
         pred = np.asarray(step(params, batch["tokens"]))

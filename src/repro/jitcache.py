@@ -1,0 +1,36 @@
+"""Process-wide shared jit registry (the ``_SHARED_JITS`` discipline).
+
+Jit wrappers built in FUNCTION scope are a retrace hazard: every call of
+the enclosing function makes a fresh closure, every fresh closure is a new
+cache key to jax, and the same jaxpr gets re-traced (and on a cold XLA
+cache, re-compiled) over and over. The engine learned this in PR 4 —
+sharing its decode/prefill/assign jits across instances cut the serving
+suites ~35% — and ``repro.analysis``'s jit-discipline pass now enforces it
+everywhere: a ``jax.jit`` site must be module-level (built once per
+import), routed through :func:`shared_jit` here, or carry an explicit
+``# nbl: disable=jit-discipline -- <reason>`` allowlist comment.
+
+Use it when the jitted closure captures only HASHABLE, value-equal
+constants (a frozen ``ModelConfig``, static plan ints/bools): two builds
+over equal keys lower to identical jaxprs, so handing every caller the
+same callable lets jax's trace cache do its job. Do NOT use it when the
+closure captures arrays (params) or mesh-captured shardings — those must
+stay per-instance, and their sites carry allowlist reasons instead.
+
+Keys are plain hashable tuples, conventionally ``("<site>", cfg, ...)``
+with every closure-captured constant included — a key that under-describes
+its closure silently serves the wrong function.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+SHARED_JITS: dict = {}
+
+
+def shared_jit(key, build: Callable):
+    """Return the process-wide jit for ``key``, building it on first use."""
+    fn = SHARED_JITS.get(key)
+    if fn is None:
+        fn = SHARED_JITS[key] = build()
+    return fn

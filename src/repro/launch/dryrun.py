@@ -143,7 +143,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, nbl_m: int = 0,
                 donate_args = (0, 1)
             elif donate and shape.kind in ("decode", "serve", "serve_paged"):
                 donate_args = (2,)
-            lowered = jax.jit(fn, in_shardings=jit_shardings(shardings),
+            lowered = jax.jit(fn, in_shardings=jit_shardings(shardings),  # nbl: disable=jit-discipline -- AOT lower/compile cell: the jit exists to be lowered once and measured, never reused
                               donate_argnums=donate_args).lower(*args)
             compiled = lowered.compile()
             try:

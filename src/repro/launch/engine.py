@@ -113,6 +113,20 @@ Architecture (frontend → scheduler → engine → cache):
                                 one predictable branch and the step path
                                 issues ZERO additional device dispatches
                                 either way)
+          analysis             yes    yes    yes         yes
+          (repro.analysis)     (static rules are layout-independent:
+                                guarded-by/lock-order cover the Engine/
+                                AsyncEngine/server locks in every mode;
+                                jit-discipline covers the shared-jit
+                                registry all UNSHARDED layouts route
+                                through — sharded jits are allowlisted
+                                per-instance by design; host-sync walks
+                                _step_impl's call graph, so admission,
+                                chunking, paging and decode are all in
+                                scope with exactly three sanctioned
+                                logits readbacks; obs-hygiene keeps the
+                                observability row's zero-overhead
+                                promise structural)
   Cache
       (L, n_slots, ...) slot rows, or (L, n_pages, KV, page_size, hd)
       pools + host page table (models/paging.py).
@@ -138,7 +152,10 @@ import threading
 import time
 from collections import deque
 from contextlib import nullcontext
-from typing import Callable, Optional
+from typing import TYPE_CHECKING, Callable, Optional
+
+if TYPE_CHECKING:   # the obs layer stays an optional, import-light dep
+    from repro.obs import Observability
 
 import jax
 import jax.numpy as jnp
@@ -147,6 +164,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.distributed.api import jit_shardings, mesh_axes, shaped_spec
 from repro.distributed.sharding import cache_specs, param_specs
+from repro.jitcache import SHARED_JITS as _SHARED_JITS, shared_jit as _shared_jit
 from repro.launch.scheduler import (
     Request, Scheduler, latency_stats, nbl_page_budget, nbl_slot_budget,
 )
@@ -161,22 +179,18 @@ from repro.models.paging import (
 _NULLCTX = nullcontext()     # shared no-op ctx for un-annotated jit calls
 
 
-# Shared jit cache for UNSHARDED engines. Engine closures capture only the
-# (hashable, value-equal) ModelConfig plus static plan constants, so two
-# engines over equal configs lower to identical jaxprs — handing them the
-# SAME callable lets jax's trace cache reuse compilations across Engine
-# instances (tests/benchmarks/the fuzz harness construct engines by the
-# hundred; per-instance closures would recompile every one). Sharded
-# engines keep per-instance jits: their in/out shardings are captured from
-# the ambient mesh at construction and must not leak across meshes.
-_SHARED_JITS: dict = {}
-
-
-def _shared_jit(key, build):
-    fn = _SHARED_JITS.get(key)
-    if fn is None:
-        fn = _SHARED_JITS[key] = build()
-    return fn
+# The shared jit cache for UNSHARDED engines lives in repro.jitcache (so
+# eval/calibrate/serve share the same registry without importing the
+# engine); `_SHARED_JITS` / `_shared_jit` above are the historical local
+# names. Engine closures capture only the (hashable, value-equal)
+# ModelConfig plus static plan constants, so two engines over equal
+# configs lower to identical jaxprs — handing them the SAME callable lets
+# jax's trace cache reuse compilations across Engine instances
+# (tests/benchmarks/the fuzz harness construct engines by the hundred;
+# per-instance closures would recompile every one). Sharded engines keep
+# per-instance jits: their in/out shardings are captured from the ambient
+# mesh at construction and must not leak across meshes — those sites are
+# allowlisted for the jit-discipline pass (repro.analysis) where built.
 
 
 class Engine:
@@ -233,7 +247,7 @@ class Engine:
                  shared_prefix_len: int = 0,
                  chunked_prefill: bool = False,
                  prefill_chunk_tokens: Optional[int] = None,
-                 obs=None,
+                 obs: Optional["Observability"] = None,
                  stats_window: Optional[int] = 1024):
         self.paged = bool(paged)
         self.page_size = int(page_size)
@@ -351,7 +365,7 @@ class Engine:
         # mid-prompt — only the FINAL chunk may end off a page boundary,
         # and it transitions the slot to decoding)
         self.slot_chunk_pos = np.full(self.n_slots, -1, np.int32)
-        self.finished: dict[int, Request] = {}
+        self.finished: dict[int, Request] = {}   # guarded-by: _finished_lock
         self.n_decode_steps = 0
         self.n_prefills = 0
         self.n_chunks = 0              # chunked-prefill chunks processed
@@ -361,7 +375,7 @@ class Engine:
         self.n_interleaved_decode_steps = 0
         self.n_prefill_tokens = 0      # valid (unpadded) tokens prefilled
         self.n_preemptions = 0
-        self.n_rejected = 0            # reject-with-error drops (any path)
+        self.n_rejected = 0   # reject-with-error drops # guarded-by: _count_lock
         self.n_cancelled = 0           # cancel() terminal retirements
         # emission hooks (AsyncEngine installs these): on_token(req, tok)
         # fires for every generated token the moment _emit records it;
@@ -374,19 +388,19 @@ class Engine:
         self.on_token: Optional[Callable] = None
         self.on_finish: Optional[Callable] = None
         self.on_submit: Optional[Callable] = None
-        self._count_lock = threading.Lock()    # guards n_rejected only
+        self._count_lock = threading.Lock()    # see n_rejected's guarded-by
         self._admit_seq = 0            # monotone admission counter (age)
         self.n_prefix_hits = 0         # admissions served a cached prefix
         self.n_shared_prompt_tokens = 0  # prompt tokens skipped via sharing
         self._pool_in_use_sum = 0      # allocator occupancy, per decode step
-        self.n_finished = 0            # lifetime served-terminal count
+        self.n_finished = 0   # lifetime served count # guarded-by: _finished_lock
         # guards the finished dict + the stats window deque: _emit/_reject/
         # _finish_cancelled write on the step thread while stats() snapshots
         # (and AsyncEngine's retain_results=False pops) from client threads
         self._finished_lock = threading.Lock()
         self.stats_window = stats_window
-        self._recent_done = deque(maxlen=int(stats_window)) \
-            if stats_window else None
+        self._recent_done = (deque(maxlen=int(stats_window))  # guarded-by: _finished_lock
+                             if stats_window else None)
         self.obs = obs
         if obs is not None:
             obs.bind(engine_mode=self.mode_name,
@@ -417,10 +431,10 @@ class Engine:
             din = (pspecs, tok_spec, cspecs, pos_spec)
             if self.paged:
                 din += (shaped_spec((self.n_slots, self._pps), "dp", None),)
-            self._decode_jit = jax.jit(
+            self._decode_jit = jax.jit(  # nbl: disable=jit-discipline -- sharded, per-instance by design
                 _decode, in_shardings=jit_shardings(din),
                 out_shardings=jit_shardings((None, cspecs)), **dkw)
-            self._assign_jit = jax.jit(
+            self._assign_jit = jax.jit(  # nbl: disable=jit-discipline -- sharded, per-instance by design
                 _assign, in_shardings=jit_shardings((cspecs, None, None)),
                 out_shardings=jit_shardings(cspecs), **akw)
         else:
@@ -560,7 +574,7 @@ class Engine:
                 ins += (None,) if with_enc else ()
                 kw = dict(in_shardings=jit_shardings(ins),
                           out_shardings=jit_shardings((None, pcspecs)))
-                fn = jax.jit(_prefill, **kw)
+                fn = jax.jit(_prefill, **kw)  # nbl: disable=jit-discipline -- sharded, per-instance by design
             else:
                 fn = _shared_jit(("prefill", cfg, paged) + key,
                                  lambda: jax.jit(_prefill))
@@ -583,7 +597,7 @@ class Engine:
                 kw.update(in_shardings=jit_shardings(
                     (self._cspecs, pcspecs, None, None)),
                     out_shardings=jit_shardings(self._cspecs))
-                fn = jax.jit(_assign, **kw)
+                fn = jax.jit(_assign, **kw)  # nbl: disable=jit-discipline -- sharded, per-instance by design
             else:
                 fn = _shared_jit(("assign_paged", cfg, ps, bool(kw)),
                                  lambda: jax.jit(_assign, **kw))
@@ -776,8 +790,11 @@ class Engine:
         it is already terminal (or unknown). NOT thread-safe: call from
         the thread driving ``step()`` — the async host loop routes client
         cancellations through an inbox drained between steps."""
-        if rid in self.finished:
-            return False
+        # terminal check under the lock: a client thread's reject-with-error
+        # (submit on a wrapped engine) can be writing finished concurrently
+        with self._finished_lock:
+            if rid in self.finished:
+                return False
         for slot, req in enumerate(self.slot_req):
             if req is not None and req.rid == rid:
                 if self.paged:
@@ -873,6 +890,8 @@ class Engine:
         self.slot_pos[slot] = plen               # position of its 1st token
         if self.obs is not None:
             self.obs.on_prefill_done(req, time.monotonic(), plen)
+        # host-sync: readback -- the admission prefill's last-token logits
+        # row: one deliberate device->host fetch per admitted request
         tok = self._sample(np.asarray(logits[0, -1], np.float32))
         self._emit(req, slot, tok, time.monotonic())
 
@@ -1014,6 +1033,8 @@ class Engine:
         # final chunk: chunking -> decoding
         self.slot_chunk_pos[slot] = -1
         self.slot_pos[slot] = plen
+        # host-sync: readback -- final-chunk logits seed decoding: one
+        # deliberate fetch when a prompt finishes chunking
         tok = self._sample(np.asarray(logits[0, -1], np.float32))
         self._emit(req, slot, tok, time.monotonic())
         return 1
@@ -1098,7 +1119,7 @@ class Engine:
             st["n_decoding"] = len(active)
             td0 = time.monotonic()
         with (self.obs.annotate("nbl.decode")
-              if st is not None else _NULLCTX):
+              if self.obs is not None else _NULLCTX):
             if self.paged:
                 logits, self.cache = self._decode_jit(
                     self.params, token, self.cache, pos,
@@ -1110,6 +1131,8 @@ class Engine:
         self.n_decode_steps += 1
         if self.chunked and np.any(self.slot_chunk_pos >= 0):
             self.n_interleaved_decode_steps += 1   # decode BETWEEN chunks
+        # host-sync: readback -- THE per-step readback: every slot's logits
+        # row comes host-side once so sampling stays off-device
         rows = np.asarray(logits[:, -1], np.float32)
         if st is not None:
             # dispatch + the logits device->host readback the sample needs
@@ -1134,8 +1157,9 @@ class Engine:
             steps += 1
             if max_steps is not None and steps >= max_steps:
                 break
-        return {rid: np.asarray(r.tokens, np.int32)
-                for rid, r in sorted(self.finished.items())}
+        with self._finished_lock:
+            done = sorted(self.finished.items())
+        return {rid: np.asarray(r.tokens, np.int32) for rid, r in done}
 
     def _drop_finished(self, rid: int) -> None:
         """Forget a terminal request's record (AsyncEngine's
@@ -1161,6 +1185,10 @@ class Engine:
             else:
                 reqs = list(self.finished.values())
                 n_finished = None
+        with self._count_lock:
+            # += on the client reject path is a non-atomic RMW; read the
+            # counter under the same lock both writers take
+            n_rejected = self.n_rejected
         s = latency_stats(reqs)
         if n_finished is not None:
             if s["n"] < n_finished:
@@ -1169,7 +1197,7 @@ class Engine:
         s.update(n_slots=self.n_slots, n_decode_steps=self.n_decode_steps,
                  n_prefills=self.n_prefills,
                  n_prefill_tokens=self.n_prefill_tokens,
-                 n_rejected=self.n_rejected, n_cancelled=self.n_cancelled)
+                 n_rejected=n_rejected, n_cancelled=self.n_cancelled)
         if self.paged:
             s.update(
                 n_pages=self.n_pages,
@@ -1320,21 +1348,23 @@ class AsyncEngine:
         # knob for a long-running server (stats percentiles then cover
         # only retained requests; the scalar counters keep counting)
         self.retain_results = bool(retain_results)
+        # RLock on purpose: _on_finish re-enters under submit_stream's hold
+        # when engine.submit rejects inline (see _expect_early)
         self._lock = threading.RLock()
-        self._streams: dict[int, Stream] = {}
-        self._live: set[int] = set()
-        self._early_end: dict[int, tuple] = {}
+        self._streams: dict[int, Stream] = {}    # guarded-by: _lock
+        self._live: set[int] = set()             # guarded-by: _lock
+        self._early_end: dict[int, tuple] = {}   # guarded-by: _lock
         # True only while submit_stream's own engine.submit call is on
         # this stack (under _lock): the ONLY legitimate window in which a
         # terminal _on_finish may precede stream registration. Gating the
         # _early_end stash on it keeps terminals of requests submitted
         # OUTSIDE submit_stream (engine.submit / direct Scheduler.submit
         # on a wrapped engine) from accumulating stashes forever.
-        self._expect_early = False
+        self._expect_early = False               # guarded-by: _lock
         self._cancels: deque = deque()
         self._wake = threading.Event()
         self._stop = False
-        self._dead = False      # set under _lock by _teardown's last act
+        self._dead = False      # teardown's last act # guarded-by: _lock
         self._drain_on_stop = True
         self._exc: Optional[BaseException] = None
         engine.on_token = self._on_token

@@ -158,7 +158,7 @@ class Scheduler:
         self.queue: deque[Request] = deque()
         self.max_prefill_per_step = max_prefill_per_step
         self.max_prefill_tokens_per_step = max_prefill_tokens_per_step
-        self._next_rid = 0
+        self._next_rid = 0                   # guarded-by: _lock
         # guards the mutations the async host loop splits across threads:
         # rid allocation (client threads; a counter increment is not
         # atomic) and queue append-vs-remove (client submit appends while

@@ -24,6 +24,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.distributed.api import jit_shardings
 from repro.distributed.sharding import cache_specs, param_specs
+from repro.jitcache import shared_jit
 from repro.launch.engine import Engine
 from repro.launch.specs import cache_shapes, param_shapes
 from repro.models import decode_step, prefill
@@ -73,11 +74,11 @@ def make_serve_fns(cfg: ModelConfig, *, batch: int, prompt_len: int,
         return decode_step(cfg, params, token, cache, pos)
 
     enc_spec = (P("data", None, None),) if cfg.family == "vlm" else ()
-    prefill_jit = jax.jit(
+    prefill_jit = jax.jit(  # nbl: disable=jit-discipline -- sharded: shardings captured from the caller's mesh, per-mesh by design
         _prefill,
         in_shardings=jit_shardings((pspecs, P("data", None)) + enc_spec),
         out_shardings=jit_shardings((None, cspecs)))
-    decode_jit = jax.jit(
+    decode_jit = jax.jit(  # nbl: disable=jit-discipline -- sharded: shardings captured from the caller's mesh, per-mesh by design
         _decode,
         in_shardings=jit_shardings((pspecs, P("data", None), cspecs, P())),
         out_shardings=jit_shardings((None, cspecs)),
@@ -94,9 +95,17 @@ def generate(cfg: ModelConfig, params, tokens, *, max_new: int,
     if use_jit_fns is not None:
         prefill_fn, decode_fn = use_jit_fns
     else:
-        prefill_fn = jax.jit(lambda p, t, e=None: prefill(
-            cfg, p, t, enc=e, cache_len=s + max_new))
-        decode_fn = jax.jit(lambda p, t, c, i: decode_step(cfg, p, t, c, i))
+        # shared across calls: generate() is the parity REFERENCE the tests
+        # and the fuzz harness call by the hundred — fresh per-call lambdas
+        # here used to retrace the whole model every single time
+        cache_len = s + max_new
+        prefill_fn = shared_jit(
+            ("serve.generate_prefill", cfg, cache_len),
+            lambda: jax.jit(lambda p, t, e=None: prefill(
+                cfg, p, t, enc=e, cache_len=cache_len)))
+        decode_fn = shared_jit(
+            ("serve.generate_decode", cfg),
+            lambda: jax.jit(lambda p, t, c, i: decode_step(cfg, p, t, c, i)))
 
     args = (params, tokens) + ((enc,) if enc is not None else ())
     logits, cache = prefill_fn(*args)

@@ -94,7 +94,7 @@ class NBLServer:
         self._sock.listen(backlog)
         self.host, self.port = self._sock.getsockname()[:2]
         self._stop = threading.Event()
-        self._down = False
+        self._down = False                   # guarded-by: _down_lock
         self._down_lock = threading.Lock()
 
     def request_stop(self) -> None:

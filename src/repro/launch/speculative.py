@@ -31,17 +31,17 @@ def speculative_generate(draft_cfg: ModelConfig, draft_params,
     (tokens (B, max_new), stats{verifier_calls, draft_tokens, accepted})."""
     b = prompts.shape[0]
 
-    @jax.jit
-    def greedy_next(params_cfg_flag, toks):
-        # one full-forward argmax over the last position
-        cfg, params = params_cfg_flag
-        logits, _ = apply(cfg, params, toks)
-        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-
-    draft_next = jax.jit(
+    # Built ONCE per generate call, outside the decode loop, closing over
+    # this call's params (arrays — unhashable, so the shared registry
+    # cannot key them); the loop below reuses the same two wrappers, so
+    # the per-call trace cost is two traces, not O(tokens). (A dead
+    # `greedy_next` jit that took (cfg, params) as a TRACED argument —
+    # which would have crashed if ever called, ModelConfig is no pytree —
+    # was deleted when the jit-discipline pass first flagged this file.)
+    draft_next = jax.jit(  # nbl: disable=jit-discipline -- closes over this call's draft params; built once per call, outside the loop
         lambda t: jnp.argmax(apply(draft_cfg, draft_params, t)[0][:, -1],
                              axis=-1).astype(jnp.int32))
-    verify_block = jax.jit(
+    verify_block = jax.jit(  # nbl: disable=jit-discipline -- closes over this call's verifier params; built once per call, outside the loop
         lambda t: jnp.argmax(apply(verify_cfg, verify_params, t)[0],
                              axis=-1).astype(jnp.int32))
 

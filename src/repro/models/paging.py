@@ -240,6 +240,13 @@ class PageAllocator:
     isolation is positional (a reallocated page's stale tokens sit at
     positions the new holder has not reached, hence masked; they are
     overwritten before ever becoming valid).
+
+    Threading: the allocator (and ``PrefixIndex``) is STEP-THREAD-ONLY —
+    every mutation happens inside ``Engine.step()``/``cancel()``, which the
+    AsyncEngine serializes on its step loop (client-thread cancels go
+    through the inbox, never here directly). That single-owner rule is why
+    there are no locks and no ``# guarded-by:`` annotations in this module;
+    ``repro.analysis`` checks the annotated engine state that upholds it.
     """
     n_pages: int
     _free: list = field(default_factory=list)

@@ -34,7 +34,7 @@ class Counter:
 
     def __init__(self, name: str, help: str, lock: threading.Lock):
         self.name, self.help = name, help
-        self._value = 0
+        self._value = 0                      # guarded-by: _lock
         self._lock = lock
 
     def inc(self, n=1) -> None:
@@ -45,7 +45,10 @@ class Counter:
 
     @property
     def value(self):
-        return self._value
+        # single attribute read: GIL-atomic, no torn state possible, and
+        # taking the shared registry lock here would let a hot probe loop
+        # contend with the step thread's inc()
+        return self._value  # nbl: disable=guarded-by -- lock-free single read is GIL-atomic
 
 
 class Gauge:
@@ -55,7 +58,7 @@ class Gauge:
 
     def __init__(self, name: str, help: str, lock: threading.Lock):
         self.name, self.help = name, help
-        self._value = 0
+        self._value = 0                      # guarded-by: _lock
         self._lock = lock
 
     def set(self, v) -> None:
@@ -68,7 +71,7 @@ class Gauge:
 
     @property
     def value(self):
-        return self._value
+        return self._value  # nbl: disable=guarded-by -- lock-free single read is GIL-atomic
 
 
 class Histogram:
@@ -91,9 +94,9 @@ class Histogram:
             raise ValueError("histogram buckets must be strictly ascending")
         self.name, self.help = name, help
         self.buckets = tuple(float(b) for b in buckets)
-        self._counts = [0] * (len(self.buckets) + 1)   # [+Inf] is last
-        self._sum = 0.0
-        self._count = 0
+        self._counts = [0] * (len(self.buckets) + 1)   # [+Inf] is last # guarded-by: _lock
+        self._sum = 0.0                      # guarded-by: _lock
+        self._count = 0                      # guarded-by: _lock
         self._lock = lock
 
     def observe(self, v) -> None:
@@ -106,11 +109,11 @@ class Histogram:
 
     @property
     def count(self) -> int:
-        return self._count
+        return self._count  # nbl: disable=guarded-by -- lock-free single read is GIL-atomic
 
     @property
     def sum(self) -> float:
-        return self._sum
+        return self._sum  # nbl: disable=guarded-by -- lock-free single read is GIL-atomic
 
     def percentile(self, q: float) -> float:
         """Bucket-interpolated percentile, q in [0, 100]. 0.0 when empty."""
@@ -157,8 +160,8 @@ class MetricsRegistry:
 
     def __init__(self, labels: Optional[dict] = None):
         self._lock = threading.Lock()
-        self.labels: dict = dict(labels or {})
-        self._metrics: dict = {}              # name -> instrument (ordered)
+        self.labels: dict = dict(labels or {})   # guarded-by: _lock
+        self._metrics: dict = {}   # name -> instrument # guarded-by: _lock
 
     def bind(self, **labels) -> None:
         """Set registry labels that are not already set (the engine binds
@@ -190,7 +193,13 @@ class MetricsRegistry:
 
     def get(self, name: str):
         """Current value of a counter/gauge by name (None if absent)."""
-        m = self._metrics.get(name)
+        # the dict lookup needs the lock (a concurrent _make may be
+        # inserting — dict mutation during .get is only safe for the
+        # built-in path, and the guarded-by rule treats _metrics as owned
+        # by _lock); the value read itself is the instrument's own
+        # lock-free GIL-atomic read
+        with self._lock:
+            m = self._metrics.get(name)
         return None if m is None else m.value
 
     def snapshot(self) -> dict:

@@ -1,0 +1,421 @@
+"""repro.analysis unit + regression coverage.
+
+Per-rule fixture pairs (a known-bad snippet the pass must flag, a
+known-good variant it must pass), the suppression grammar (including
+jit-discipline's allowlist-with-reason requirement), baseline round-trip,
+and the two load-bearing integration claims:
+
+* the tree-wide regression — ``src/repro`` analyzes CLEAN against the
+  burned-empty baseline, so any new violation fails this test before it
+  fails CI;
+* a DYNAMIC cross-check of the jit-discipline rule's premise: building a
+  fresh ``jax.jit`` per iteration really does retrace every time, while
+  the ``repro.jitcache.shared_jit`` wrapper traces once.
+"""
+from __future__ import annotations
+
+import pathlib
+import textwrap
+
+import pytest
+
+from repro.analysis import (
+    ALL_RULES,
+    analyze_modules,
+    analyze_source,
+    collect_modules,
+    filter_baselined,
+    load_baseline,
+    save_baseline,
+)
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def run(src: str, rel: str = "fixture.py", rules=None):
+    return analyze_source(textwrap.dedent(src), rel=rel, rules=rules)
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------- guarded-by
+GUARDED_BAD = """
+    import threading
+
+    class C:
+        def __init__(self):
+            self.n = 0   # guarded-by: _lock
+            self._lock = threading.Lock()
+
+        def read(self):
+            return self.n
+"""
+
+GUARDED_GOOD = """
+    import threading
+
+    class C:
+        def __init__(self):
+            self.n = 0   # guarded-by: _lock
+            self._lock = threading.Lock()
+
+        def read(self):
+            with self._lock:
+                return self.n
+"""
+
+
+def test_guarded_by_flags_unlocked_access():
+    found = run(GUARDED_BAD, rules={"guarded-by"})
+    assert len(found) == 1
+    f = found[0]
+    assert f.rule == "guarded-by" and "self.n" in f.message
+    assert f.symbol == "C.read"
+
+
+def test_guarded_by_passes_locked_access():
+    assert run(GUARDED_GOOD, rules={"guarded-by"}) == []
+
+
+def test_guarded_by_init_exempt():
+    # __init__ constructs the attrs it annotates; no lock exists yet
+    assert all(f.symbol != "C.__init__"
+               for f in run(GUARDED_BAD, rules={"guarded-by"}))
+
+
+# ---------------------------------------------------------------- lock-order
+DEADLOCK_BAD = """
+    import threading
+
+    class C:
+        def __init__(self):
+            self._lock = threading.Lock()
+
+        def outer(self):
+            with self._lock:
+                self.inner()
+
+        def inner(self):
+            with self._lock:
+                pass
+"""
+
+# same shape, RLock: re-entry is the documented AsyncEngine._lock pattern
+DEADLOCK_OK_RLOCK = DEADLOCK_BAD.replace("threading.Lock()",
+                                         "threading.RLock()")
+
+ORDER_CYCLE = """
+    import threading
+
+    class C:
+        def __init__(self):
+            self._a = threading.Lock()
+            self._b = threading.Lock()
+
+        def ab(self):
+            with self._a:
+                with self._b:
+                    pass
+
+        def ba(self):
+            with self._b:
+                with self._a:
+                    pass
+"""
+
+
+def test_lock_order_flags_plain_lock_self_deadlock():
+    found = run(DEADLOCK_BAD, rules={"lock-order"})
+    assert found and all(f.rule == "lock-order" for f in found)
+    assert any("_lock" in f.message for f in found)
+
+
+def test_lock_order_allows_rlock_reentry():
+    assert run(DEADLOCK_OK_RLOCK, rules={"lock-order"}) == []
+
+
+def test_lock_order_flags_ab_ba_cycle():
+    found = run(ORDER_CYCLE, rules={"lock-order"})
+    assert found and any("cycle" in f.message for f in found)
+
+
+# ------------------------------------------------------------ jit-discipline
+JIT_BAD = """
+    import jax
+
+    def f(x):
+        step = jax.jit(lambda t: t + 1)
+        return step(x)
+"""
+
+JIT_GOOD_SHARED = """
+    import jax
+    from repro.jitcache import shared_jit
+
+    def f(cfg, x):
+        step = shared_jit(("fixture.f", cfg),
+                          lambda: jax.jit(lambda t: t + 1))
+        return step(x)
+"""
+
+JIT_GOOD_MODULE_LEVEL = """
+    import jax
+
+    @jax.jit
+    def step(t):
+        return t + 1
+"""
+
+
+def test_jit_discipline_flags_function_scope_jit():
+    found = run(JIT_BAD, rules={"jit-discipline"})
+    assert len(found) == 1 and found[0].symbol == "f"
+
+
+def test_jit_discipline_passes_shared_and_module_level():
+    assert run(JIT_GOOD_SHARED, rules={"jit-discipline"}) == []
+    assert run(JIT_GOOD_MODULE_LEVEL, rules={"jit-discipline"}) == []
+
+
+def test_jit_discipline_suppression_requires_reason():
+    # bare disable does NOT allowlist a jit site...
+    bare = JIT_BAD.replace(
+        "jax.jit(lambda t: t + 1)",
+        "jax.jit(lambda t: t + 1)  # nbl: disable=jit-discipline")
+    assert run(bare, rules={"jit-discipline"}) != []
+    # ...a reasoned one does
+    reasoned = JIT_BAD.replace(
+        "jax.jit(lambda t: t + 1)",
+        "jax.jit(lambda t: t + 1)  # nbl: disable=jit-discipline -- why")
+    assert run(reasoned, rules={"jit-discipline"}) == []
+
+
+# --------------------------------------------------------------- jit-retrace
+RETRACE_LOOP = """
+    import jax
+
+    def f(xs):
+        out = []
+        for x in xs:
+            out.append(jax.jit(lambda t: t + 1)(x))
+        return out
+"""
+
+RETRACE_UNHASHABLE_STATIC = """
+    import jax
+
+    def f(x):
+        g = jax.jit(lambda t, names: t, static_argnames=("names",))
+        return g(x, names=["a", "b"])
+"""
+
+
+def test_jit_retrace_flags_jit_in_loop():
+    assert rules_of(run(RETRACE_LOOP, rules={"jit-retrace"})) == \
+        {"jit-retrace"}
+
+
+def test_jit_retrace_flags_unhashable_static():
+    found = run(RETRACE_UNHASHABLE_STATIC, rules={"jit-retrace"})
+    assert found and any("static" in f.message for f in found)
+
+
+# ----------------------------------------------------------------- host-sync
+HOSTSYNC_DIRECT = """
+    class Engine:
+        def _step_impl(self):
+            return self.logits.item()
+"""
+
+HOSTSYNC_VIA_CALL = """
+    class Engine:
+        def _step_impl(self):
+            return self._helper()
+
+        def _helper(self):
+            return float(self.x)
+"""
+
+HOSTSYNC_SANCTIONED = """
+    import numpy as np
+
+    class Engine:
+        def _step_impl(self):
+            # host-sync: readback -- the step's one sanctioned logits pull
+            v = np.asarray(self.logits)
+            return v
+"""
+
+HOSTSYNC_UNREACHABLE = """
+    import numpy as np
+
+    class Engine:
+        def _step_impl(self):
+            return 0
+
+    def offline_tool(x):
+        return np.asarray(x)     # not reachable from the step: fine
+"""
+
+
+def test_host_sync_flags_direct_item():
+    found = run(HOSTSYNC_DIRECT, rules={"host-sync"})
+    assert len(found) == 1 and ".item()" in found[0].message
+
+
+def test_host_sync_follows_call_graph():
+    found = run(HOSTSYNC_VIA_CALL, rules={"host-sync"})
+    assert found and found[0].symbol == "Engine._helper"
+
+
+def test_host_sync_sanction_comment():
+    assert run(HOSTSYNC_SANCTIONED, rules={"host-sync"}) == []
+
+
+def test_host_sync_only_flags_reachable_code():
+    assert run(HOSTSYNC_UNREACHABLE, rules={"host-sync"}) == []
+
+
+# -------------------------------------------------------------- perf-counter
+PERF = """
+    import time
+
+    def f():
+        return time.perf_counter()
+"""
+
+
+def test_perf_counter_flagged_outside_obs():
+    found = run(PERF, rel="src/repro/launch/fixture.py",
+                rules={"perf-counter"})
+    assert len(found) == 1 and "perf_counter" in found[0].message
+
+
+def test_perf_counter_allowed_under_obs():
+    assert run(PERF, rel="src/repro/obs/fixture.py",
+               rules={"perf-counter"}) == []
+
+
+# --------------------------------------------------------------- obs-hygiene
+OBS_BAD = """
+    class Engine:
+        def _step_impl(self):
+            self.obs.on_token(1)
+"""
+
+OBS_GOOD = """
+    class Engine:
+        def _step_impl(self):
+            if self.obs is not None:
+                self.obs.on_token(1)
+"""
+
+
+def test_obs_hygiene_flags_unguarded_hook():
+    found = run(OBS_BAD, rules={"obs-hygiene"})
+    assert len(found) == 1 and "self.obs.on_token" in found[0].message
+
+
+def test_obs_hygiene_passes_guarded_hook():
+    assert run(OBS_GOOD, rules={"obs-hygiene"}) == []
+
+
+# ------------------------------------------------- suppressions and baseline
+def test_inline_suppression_honored():
+    sup = GUARDED_BAD.replace("return self.n",
+                              "return self.n  # nbl: disable=guarded-by")
+    assert run(sup, rules={"guarded-by"}) == []
+
+
+def test_comment_only_suppression_attaches_to_next_code_line():
+    sup = GUARDED_BAD.replace(
+        "        def read(self):\n            return self.n",
+        "        def read(self):\n"
+        "            # nbl: disable=guarded-by\n"
+        "            return self.n")
+    assert run(sup, rules={"guarded-by"}) == []
+
+
+def test_unknown_rule_never_suppresses():
+    sup = GUARDED_BAD.replace("return self.n",
+                              "return self.n  # nbl: disable=other-rule")
+    assert run(sup, rules={"guarded-by"}) != []
+
+
+def test_baseline_round_trip(tmp_path):
+    found = run(GUARDED_BAD) + run(JIT_BAD)
+    assert found
+    path = str(tmp_path / "baseline.json")
+    save_baseline(path, found)
+    keys = load_baseline(path)
+    assert keys == {f.baseline_key for f in found}
+    # everything baselined filters to nothing; a fresh finding survives
+    assert filter_baselined(found, keys) == []
+    fresh = run(OBS_BAD)
+    assert filter_baselined(found + fresh, keys) == fresh
+
+
+def test_baseline_is_line_insensitive(tmp_path):
+    found = run(GUARDED_BAD)
+    path = str(tmp_path / "baseline.json")
+    save_baseline(path, found)
+    shifted = run("\n\n\n" + textwrap.dedent(GUARDED_BAD))
+    assert shifted and shifted[0].line != found[0].line
+    assert filter_baselined(shifted, load_baseline(path)) == []
+
+
+# ------------------------------------------------------ tree-wide regression
+def test_src_tree_is_clean():
+    """src/repro analyzes clean against the burned-empty baseline: every
+    real finding this PR surfaced was either fixed or allowlisted with a
+    reason, and new violations fail here before they fail CI."""
+    mods = collect_modules([str(REPO / "src" / "repro")], str(REPO))
+    assert len(mods) > 30                    # the walk found the tree
+    findings = analyze_modules(mods)
+    baseline = load_baseline(str(REPO / "scripts" / "analysis_baseline.json"))
+    assert baseline == set()                 # burned empty on purpose
+    assert filter_baselined(findings, baseline) == [], \
+        "\n".join(f.render() for f in findings)
+
+
+def test_all_rules_have_fixture_coverage():
+    covered = {"guarded-by", "lock-order", "jit-discipline", "jit-retrace",
+               "host-sync", "perf-counter", "obs-hygiene"}
+    assert covered == set(ALL_RULES)
+
+
+# --------------------------------------------- dynamic retrace cross-check
+def test_unshared_jit_retraces_shared_does_not():
+    """The premise behind jit-discipline, checked against the real tracer:
+    a fresh ``jax.jit`` per iteration retraces every time; the shared
+    wrapper traces once and the registry returns the SAME object after."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.jitcache import SHARED_JITS, shared_jit
+
+    traces = []
+
+    def make_f(tag):
+        def f(x):
+            traces.append(tag)               # runs at TRACE time only
+            return x + 1
+        return f
+
+    for _ in range(3):                       # the anti-pattern
+        jax.jit(make_f("fresh"))(jnp.ones(2)).block_until_ready()
+    assert traces.count("fresh") == 3
+
+    key = ("test_analysis.retrace", object())
+    try:
+        fns = set()
+        for _ in range(3):                   # the sanctioned route
+            fn = shared_jit(key, lambda: jax.jit(make_f("shared")))
+            fns.add(id(fn))
+            fn(jnp.ones(2)).block_until_ready()
+        assert traces.count("shared") == 1
+        assert len(fns) == 1                 # registry hands back one object
+    finally:
+        SHARED_JITS.pop(key, None)
