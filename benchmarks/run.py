@@ -36,6 +36,12 @@
                       and p50/p99 queue delay (submit->admission) vs
                       NBL-m, token-exact parity of the streamed tokens vs
                       generate(), zero leaked pages after shutdown
+  speculative_throughput  engine-native self-speculative decoding (Table 6
+                      analog): calibrated NBL drafter sharing the target's
+                      page table vs non-spec paged decode at EQUAL HBM
+                      budget on single streams — tokens/s, tokens/burst,
+                      acceptance vs (draft-m, γ); token-exact greedy
+                      parity + zero leaked pages every pass
   kernels             µs/call of the three Pallas kernels (interpret mode —
                       CPU-emulated, structural check only)
 
@@ -713,31 +719,115 @@ def bench_kernels(fast: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
-def bench_speculative(fast: bool) -> None:
-    """Table 6 analog: NBL-compressed models in a draft-and-verify loop.
-    Reports acceptance rate + tokens per verifier call (the compounding
-    mechanism behind the paper's 4.07×)."""
-    import jax.numpy as jnp
+def bench_spec_throughput(fast: bool) -> None:
+    """Table 6 analog, engine-native: self-speculative decoding (the SAME
+    trained params under a deeper NBL plan drafting through the target's
+    own page table) vs non-spec paged decode at EQUAL HBM budget on a
+    single-stream workload — the latency scenario speculation targets.
+    The drafter's linear maps are CALIBRATED (core.calibrate on the
+    deepest-m attention layers), because acceptance is what converts the
+    2-dispatch burst (one scanned γ-token draft + one batched verify)
+    into >1 token per step. Reported per (draft-m, γ): tokens/s,
+    tokens/burst, acceptance; draft-m=0 (the target drafting for itself,
+    acceptance 1) bounds the machinery's ceiling. Every timed pass
+    asserts token-exact generate() parity and a drained, zero-leak pool;
+    the headline asserts a CALIBRATED draft (m >= 1) emits > 1
+    token/burst and beats the non-spec engine's tokens/s."""
     from repro.configs import get_config
-    from repro.core import nbl_compress
+    from repro.core import calibrate
     from repro.data import ZipfMarkov, calib_factory
-    from repro.launch.speculative import speculative_generate
+    from repro.launch.engine import Engine
+    from repro.launch.serve import generate
+    from repro.launch.speculative import make_nbl_draft
     from repro.launch.train import train
 
     cfg = get_config("tiny-dense")
     params = train(cfg, steps=120 if fast else 200, global_batch=16, seq=64,
                    peak_lr=3e-3, log_fn=lambda s: None)["params"]
     fac = calib_factory(cfg, batch=4, seq=64, n_batches=4)
+    calib = calibrate(cfg, params, fac)
+
+    from repro.models.kv_cache import cache_bytes
+
+    max_len, page_size = 64, 8
+    budget = 2 * cache_bytes(cfg, 1, max_len)      # 2 full rings, both sides
+    n_req = 4 if fast else 8
+    max_new = 24                       # decode-dominated single streams
     proc = ZipfMarkov(cfg.vocab_size, seed=0)
-    prompts = jnp.asarray(proc.sample(2, 12, seed=3))
-    for m in (1, 2):
-        ncfg, nparams, _ = nbl_compress(cfg, params, fac, m)
-        _, stats = speculative_generate(ncfg, nparams, cfg, params,
-                                        prompts, max_new=12, gamma=4)
-        emit(f"spec_decode/nbl-{m}_draft/acceptance",
-             round(stats["acceptance_rate"], 3))
-        emit(f"spec_decode/nbl-{m}_draft/tokens_per_verify",
-             round(stats["tokens_per_verifier_call"], 2))
+    prompts = [np.asarray(p, np.int32) for p in proc.sample(n_req, 12,
+                                                            seed=3)]
+    refs = [np.asarray(generate(cfg, params, jnp.asarray(p)[None],
+                                max_new=max_new))[0] for p in prompts]
+
+    def run_sweep(eng, gamma, draft_m):
+        """One sequential pass over the stream; asserts parity + zero
+        leak. Sequential submit->drain is the single-stream latency
+        shape: batched decode cannot hide the per-token dispatch."""
+        t0 = clock()
+        for p, want in zip(prompts, refs):
+            rid = eng.submit(p, max_new, spec_gamma=gamma,
+                             draft_m=draft_m)
+            out = eng.run()
+            np.testing.assert_array_equal(out[rid], want)
+        dt = clock() - t0
+        assert eng.allocator.in_use == 0
+        return dt
+
+    ms = ((0, 1, 2) if fast else (0, 1, 2, 3))
+    gammas = (4,) if fast else (2, 4)
+    drafts = {m: make_nbl_draft(
+        cfg, params, m,
+        linear_maps={i: calib[i].linear
+                     for i in cfg.attn_layer_indices()[-m:]} if m else None)
+        for m in ms}
+
+    # non-spec baseline: same budget, same stream, plain paged decode
+    eng = Engine(cfg, params, max_len=max_len, cache_budget_bytes=budget,
+                 paged=True, page_size=page_size)
+    run_sweep(eng, 0, None)                       # warmup: compile jits
+    dts = [run_sweep(eng, 0, None) for _ in range(TIMED_REPEATS)]
+    ntok = n_req * max_new
+    base_rate = ntok / min(dts)
+    emit("spec/baseline/tokens_per_s", round(base_rate, 1), "equal_budget")
+
+    best = {}                                     # m -> best tok/s
+    tpb = {}                                      # m -> tokens/burst at best
+    for m in ms:
+        for gamma in gammas:
+            eng = Engine(cfg, params, max_len=max_len,
+                         cache_budget_bytes=budget, paged=True,
+                         page_size=page_size, drafts={m: drafts[m]})
+            run_sweep(eng, gamma, m)              # warmup: compile jits
+            b0, t0 = eng.n_spec_bursts, eng.n_spec_tokens
+            a0, d0 = eng.n_spec_accepted_tokens, eng.n_spec_draft_tokens
+            dts, bursts = [], []
+            for _ in range(TIMED_REPEATS):
+                s0 = eng.n_spec_bursts
+                dts.append(run_sweep(eng, gamma, m))
+                bursts.append(eng.n_spec_bursts - s0)
+            assert len(set(bursts)) == 1, bursts  # same work every pass
+            rate = ntok / min(dts)
+            per_burst = (eng.n_spec_tokens - t0) / max(eng.n_spec_bursts
+                                                       - b0, 1)
+            acc = (eng.n_spec_accepted_tokens - a0) / max(
+                eng.n_spec_draft_tokens - d0, 1)
+            emit(f"spec/nbl-{m}/gamma-{gamma}/tokens_per_s",
+                 round(rate, 1), "equal_budget")
+            emit(f"spec/nbl-{m}/gamma-{gamma}/tokens_per_burst",
+                 round(per_burst, 2), "deterministic")
+            emit(f"spec/nbl-{m}/gamma-{gamma}/acceptance",
+                 round(acc, 3), "deterministic")
+            if rate > best.get(m, 0.0):
+                best[m], tpb[m] = rate, per_burst
+    # headline: a CALIBRATED self-draft multiplies tokens per step AND
+    # converts it into throughput over the non-spec engine (parity and
+    # zero-leak already asserted inside every pass)
+    winner = max((m for m in best if m >= 1), key=lambda m: best[m])
+    assert tpb[winner] > 1.0, (winner, tpb)
+    assert best[winner] > base_rate, (winner, best[winner], base_rate)
+    emit("spec/best_calibrated_m", winner, "assert_beats_baseline")
+    emit("spec/speedup_vs_baseline",
+         round(best[winner] / base_rate, 2), "assert_gt_1")
 
 
 def bench_quant_compose(fast: bool) -> None:
@@ -800,7 +890,7 @@ BENCHES = {
     "prefix_throughput": bench_prefix,
     "chunked_throughput": bench_chunked,
     "async_throughput": bench_async,
-    "spec_decode": bench_speculative,
+    "speculative_throughput": bench_spec_throughput,
     "quant_compose": bench_quant_compose,
     "lora": bench_lora,
     "kernels": bench_kernels,

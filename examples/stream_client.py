@@ -71,11 +71,20 @@ class Client:
             yield self._buf.popleft() if self._buf else self._recv()
 
     def submit(self, prompt, max_new: int, *, stream: bool = True,
-               tag=None) -> int:
+               tag=None, spec_gamma: int = 0,
+               draft_m: Optional[int] = None) -> int:
         """Submit a request; returns its rid (a rejected submission still
-        gets a rid — its "done" event carries status/error)."""
-        self.send({"op": "submit", "prompt": [int(t) for t in prompt],
-                   "max_new": int(max_new), "stream": stream, "tag": tag})
+        gets a rid — its "done" event carries status/error).
+        ``spec_gamma > 0`` opts into speculative decoding on a server
+        started with ``--draft-m``; ``draft_m`` picks the registered
+        drafter."""
+        msg = {"op": "submit", "prompt": [int(t) for t in prompt],
+               "max_new": int(max_new), "stream": stream, "tag": tag}
+        if spec_gamma:
+            msg["spec_gamma"] = int(spec_gamma)
+            if draft_m is not None:
+                msg["draft_m"] = int(draft_m)
+        self.send(msg)
         return int(self._wait_for("submitted")["rid"])
 
     def cancel(self, rid: int) -> None:
@@ -153,6 +162,11 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--cancel-first", type=int, default=None, metavar="K",
                     help="cancel the first request after K streamed tokens")
+    ap.add_argument("--spec-gamma", type=int, default=0,
+                    help="submit with speculative decoding (needs a server "
+                         "started with --draft-m)")
+    ap.add_argument("--draft-m", type=int, default=None,
+                    help="drafter depth for --spec-gamma submissions")
     ap.add_argument("--watch", action="store_true",
                     help="poll the metrics op and render a one-line live "
                          "ticker instead of submitting requests")
@@ -174,7 +188,8 @@ def main() -> None:
         return
     rids = [cli.submit([rng.randrange(args.vocab)
                         for _ in range(args.prompt_len)],
-                       args.max_new, tag=i) for i in range(args.n)]
+                       args.max_new, tag=i, spec_gamma=args.spec_gamma,
+                       draft_m=args.draft_m) for i in range(args.n)]
     victim = rids[0] if args.cancel_first is not None else None
     tokens: dict = {r: [] for r in rids}
     done: dict = {}

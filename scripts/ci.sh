@@ -18,8 +18,9 @@
 #   5. chunked-prefill smoke: a long prompt admitted one page-aligned
 #      chunk per step next to two active decodes — decode tokens emitted
 #      BETWEEN chunks, exact parity — then the serving-oracle fuzz suite
-#      at a bounded example count (50 seeds x 5 engine modes x {sync,
-#      async} = 500 randomized workloads vs generate()) and the
+#      at a bounded example count (50 seeds x 6 engine modes x {sync,
+#      async} = 600 randomized workloads vs generate(), the sixth mode
+#      being engine-native speculative decoding) and the
 #      chunked_throughput benchmark scenario under --fast
 #   6. async serving smoke: the newline-JSON TCP server is started on a
 #      free port, 3 overlapping requests are streamed through the
@@ -32,6 +33,13 @@
 #      async_throughput benchmark scenario under --fast — which itself
 #      asserts the obs overhead guard (registry-enabled streamed tok/s
 #      within 3% of disabled + zero extra device dispatches at m=0).
+#   7. speculative smoke: the server is restarted with --draft-m (the
+#      NBL self-drafter registered engine-side), a spec stream and a
+#      plain stream run concurrently through the client — both
+#      exact-match generate(), the stats op shows bursts ran and ZERO
+#      leaked pages after rollback. Then the speculative_throughput
+#      benchmark scenario under --fast (calibrated drafter beating the
+#      non-spec engine at equal HBM budget, in-benchmark parity).
 #
 #   bash scripts/ci.sh
 set -euo pipefail
@@ -191,7 +199,7 @@ print(f"chunked smoke OK: {s['n_chunks']} chunks, "
       f"exact parity")
 EOF
 
-echo "== serving-oracle fuzz suite (500 examples: 50 seeds x 5 modes x {sync,async}) =="
+echo "== serving-oracle fuzz suite (600 examples: 50 seeds x 6 modes x {sync,async}) =="
 NBL_FUZZ_EXAMPLES=50 python -m pytest -q tests/test_serving_fuzz.py
 
 echo "== chunked_throughput scenario (--fast) =="
@@ -300,5 +308,80 @@ EOF
 echo "== async_throughput scenario (--fast, incl. obs overhead guard) =="
 python -m benchmarks.run --fast --only async_throughput > /dev/null
 test -s benchmarks/out/async_throughput.json
+
+echo "== speculative smoke (TCP server with --draft-m: spec + plain streams) =="
+python - <<'EOF'
+import warnings; warnings.filterwarnings("ignore")
+import importlib.util, subprocess, sys
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.launch.serve import generate
+from repro.models import init_params
+
+# --draft-m registers the zero-map NBL self-drafter engine-side; greedy
+# acceptance keeps the stream token-exact regardless of draft quality,
+# so the smoke asserts PARITY through draft/verify/rollback, not speed
+proc = subprocess.Popen(
+    [sys.executable, "-m", "repro.launch.server", "--port", "0",
+     "--config", "tiny-dense", "--seed", "0", "--max-len", "48",
+     "--n-slots", "2", "--paged", "--page-size", "4", "--draft-m", "2"],
+    stdout=subprocess.PIPE, text=True)
+try:
+    line = proc.stdout.readline().strip()
+    assert line.startswith("LISTENING"), line
+    port = int(line.split()[1])
+
+    spec = importlib.util.spec_from_file_location(
+        "stream_client", "examples/stream_client.py")
+    sc = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(sc)
+    cli = sc.Client("127.0.0.1", port, timeout=300)
+
+    cfg = get_config("tiny-dense")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (6, 9)]
+    refs = [np.asarray(generate(cfg, params, jnp.asarray(p)[None],
+                                max_new=12))[0] for p in prompts]
+
+    # one speculative stream, one plain — mixed traffic over the wire
+    rids = [cli.submit(prompts[0], 12, tag=0, spec_gamma=3, draft_m=2),
+            cli.submit(prompts[1], 12, tag=1)]
+    done = {}
+    for ev in cli.events():
+        if ev["event"] == "done":
+            done[ev["rid"]] = ev
+            if len(done) == 2:
+                break
+    for rid, want in zip(rids, refs):
+        assert done[rid]["status"] == "finished", done[rid]
+        np.testing.assert_array_equal(np.asarray(done[rid]["tokens"]), want)
+
+    st = cli.stats()
+    assert st["pages_in_use"] == 0, st         # rollback freed every page
+    assert st["n_spec_bursts"] >= 1, st        # the spec path really ran
+    assert st["n_spec_tokens"] >= 1, st
+    # a spec submission that cannot fit its candidate span is rejected
+    # with an error, over the wire, without killing the stream loop
+    bad = cli.submit(prompts[0], 40, spec_gamma=3, draft_m=2)
+    for ev in cli.events():
+        if ev["event"] == "done" and ev["rid"] == bad:
+            assert ev["status"] == "rejected" and "max_len" in ev["error"]
+            break
+    cli.shutdown(); cli.close()
+    proc.wait(timeout=120)
+    assert proc.returncode == 0, proc.returncode
+    print(f"spec smoke OK: spec+plain exact parity, "
+          f"{st['n_spec_bursts']} bursts, "
+          f"{st['n_spec_accepted_tokens']} accepted, 0 leaked pages")
+finally:
+    if proc.poll() is None:
+        proc.kill()
+EOF
+
+echo "== speculative_throughput scenario (--fast, calibrated drafter) =="
+python -m benchmarks.run --fast --only speculative_throughput > /dev/null
+test -s benchmarks/out/speculative_throughput.json
 
 echo "CI OK"

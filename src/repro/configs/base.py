@@ -251,6 +251,11 @@ SHAPES: dict[str, ShapeConfig] = {
     # prefill_shared; only the prefix table's provenance differs)
     "prefill_chunked_4k": ShapeConfig("prefill_chunked_4k",
                                       "prefill_chunked", 4_096, 32),
+    # speculative verify: one candidate block (page tail + γ draft tokens)
+    # scored behind the slot's committed pages — batch=1, the engine's
+    # per-slot cache-extend (launch/engine._run_spec_verify)
+    "spec_verify_4k": ShapeConfig("spec_verify_4k", "spec_verify",
+                                  4_096, 1),
     "long_500k":   ShapeConfig("long_500k",   "decode",  524_288, 1),
 }
 
@@ -261,7 +266,7 @@ def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
     if shape.name == "long_500k" and not cfg.sub_quadratic:
         return False, ("full-attention arch: 524k dense KV cache/attention is "
                        "the quadratic regime this shape excludes (DESIGN.md)")
-    if shape.kind in ("prefill_shared", "prefill_chunked"):
+    if shape.kind in ("prefill_shared", "prefill_chunked", "spec_verify"):
         if any(b.kind == "mamba" for b in cfg.blocks()):
             return False, ("SSM stack: partial prefill cannot resume scanned "
                            "state mid-sequence (models/transformer.prefill)")

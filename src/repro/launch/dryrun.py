@@ -81,15 +81,19 @@ def build_target(cfg, shape):
         ntok = shape.global_batch * shape.seq_len
         return prefill_step, args, shardings, ntok, False
 
-    if shape.kind in ("prefill_shared", "prefill_chunked"):
+    if shape.kind in ("prefill_shared", "prefill_chunked", "spec_verify"):
         # partial prefill: suffix/chunk tokens at absolute positions past
-        # pooled prefix pages — a shared prompt prefix (engine _admit) or
-        # the request's own earlier chunks (engine _chunk_step); the jit
-        # is identical, only the prefix table's provenance differs
+        # pooled prefix pages — a shared prompt prefix (engine _admit), the
+        # request's own earlier chunks (engine _chunk_step), or the
+        # speculative verifier's candidate block (engine _run_spec_verify,
+        # which additionally reads the last γ+1 logits rows); the jit is
+        # identical, only the prefix table's provenance differs
+        n_logits = 9 if shape.kind == "spec_verify" else 1   # γ=8 verify
+
         def shared_prefill_step(params, tokens, cache, ptbl, plen):
             return prefill(cfg, params, tokens, cache_len=shape.seq_len,
                            paged=True, prefix_cache=cache, prefix_tbl=ptbl,
-                           prefix_len=plen)
+                           prefix_len=plen, n_logits=n_logits)
         args = (pshapes, ins["tokens"], ins["cache"], ins["prefix_tbl"],
                 ins["prefix_len"])
         shardings = (pspecs, shaped_spec(ins["tokens"].shape, "dp", None),

@@ -62,6 +62,32 @@ Architecture (frontend → scheduler → engine → cache):
       then chunk only the suffix); gated off for SSM stacks like the
       other partial-prefill paths.
 
+      SPECULATIVE DECODING (``drafts={m: (draft_cfg, draft_params)}`` +
+      per-request ``submit(..., spec_gamma=k, draft_m=m)``, paged only):
+      NBL hands the engine a free self-drafter — the SAME weights under a
+      deeper linearization plan (launch/speculative.make_nbl_draft).
+      Because the draft linearizes the DEEPEST layers, its surviving
+      attention layers are the target's shallow ones, so the draft
+      attends the target's own paged KV through the slot's page table
+      (no draft cache exists). Each spec step runs one per-slot draft
+      burst (γ greedy tokens from one scanned jit over a trace-time view
+      of the target pools) and ONE verifier cache-extend — the PR 3/4
+      partial-prefill jit re-run from the slot's last page boundary with
+      γ+1 logits rows, the slot's own pages as the prefix; no new model
+      code exists below the page table. The longest agreeing prefix plus
+      one corrected token is emitted; rejection ROLLBACK is a pure
+      per-slot length decrement (pages are position-aligned — no kpos to
+      repair) plus returning the surplus candidate-span pages
+      (models/paging.release_tail_pages). Greedy acceptance is EXACT:
+      spec output is token-identical to ``generate()`` regardless of
+      draft quality (the fuzz harness asserts it). Composes with prefix
+      sharing and chunked prefill; requires temperature 0, an unsharded
+      engine, and ``prompt + max_new + spec_gamma <= max_len`` (the
+      candidate span must fit the page table). Sliding-window stacks
+      keep ALL of a spec slot's pages resident (window page release is
+      skipped: the verifier's prefix gather reads from page 0) — spec
+      trades the SWA page saving for the draft/verify speedup.
+
       ``step()`` interleaves: (1) admission — for every free slot (and, when
       paged, enough free pages), pop a request, prefill it at batch=1,
       assign its cache (slot row / prompt pages), emit its first token
@@ -96,6 +122,13 @@ Architecture (frontend → scheduler → engine → cache):
                                              resume)     conditioned KV)
           chunked_prefill      yes    yes    no (scan    yes (enc rides
                                              resume)     every chunk)
+          speculative          yes    yes    no (verify  no (the draft
+          (drafts= + per-      (all pages    is a        must be a pure
+          request spec_gamma)  stay          partial     attn/nbl plan;
+                               resident)     prefill)    enc-conditioned
+                                                         KV cannot be
+                                                         drafted) —
+                               unsharded engines only; greedy (temp 0)
           async / server       yes    yes    yes*        yes*
                                (*inherits the WRAPPED layout's gates
                                 verbatim: AsyncEngine/launch.server drive
@@ -122,9 +155,10 @@ Architecture (frontend → scheduler → engine → cache):
                                 through — sharded jits are allowlisted
                                 per-instance by design; host-sync walks
                                 _step_impl's call graph, so admission,
-                                chunking, paging and decode are all in
-                                scope with exactly three sanctioned
-                                logits readbacks; obs-hygiene keeps the
+                                chunking, paging, decode and the spec
+                                draft/verify path are all in scope, every
+                                readback sanctioned per line; obs-hygiene
+                                keeps the
                                 observability row's zero-overhead
                                 promise structural)
   Cache
@@ -170,10 +204,14 @@ from repro.launch.scheduler import (
 )
 from repro.models import decode_step, prefill
 from repro.models.kv_cache import assign_slot, init_slot_cache
+from repro.launch.speculative import (
+    accept_greedy, build_draft_cache_view, draft_burst, validate_draft,
+)
 from repro.models.paging import (
     DEFAULT_PAGE_SIZE, PageAllocator, PrefixIndex, assign_pages,
     build_page_table, init_paged_cache, n_caching_attn_layers,
-    pages_per_seq, pool_pages_for_budget, pow2_ceil, span_pages,
+    pages_per_seq, pool_pages_for_budget, pow2_ceil, release_tail_pages,
+    span_pages,
 )
 
 _NULLCTX = nullcontext()     # shared no-op ctx for un-annotated jit calls
@@ -248,7 +286,8 @@ class Engine:
                  chunked_prefill: bool = False,
                  prefill_chunk_tokens: Optional[int] = None,
                  obs: Optional["Observability"] = None,
-                 stats_window: Optional[int] = 1024):
+                 stats_window: Optional[int] = 1024,
+                 drafts: Optional[dict] = None):
         self.paged = bool(paged)
         self.page_size = int(page_size)
         if self.paged and self.page_size & (self.page_size - 1):
@@ -287,6 +326,23 @@ class Engine:
                 raise ValueError("prefix_sharing cannot serve SSM or "
                                  "cross-attention stacks (prefix KV is not "
                                  "a pure function of prompt tokens)")
+        # speculative decoding: {draft_m: (draft_cfg, draft_params)}.
+        # Registered at construction so the draft-burst jits can be keyed
+        # and shared; per-request opt-in via submit(spec_gamma=, draft_m=).
+        self.drafts: dict = dict(drafts) if drafts else {}
+        if self.drafts:
+            if not self.paged:
+                raise ValueError("speculative decoding requires paged=True "
+                                 "(the verifier re-prefills through the "
+                                 "slot's page table)")
+            if any(b.kind in ("mamba", "cross_attn") for b in cfg.blocks()):
+                # mamba: the verifier is a partial prefill (cannot resume
+                # scanned state). cross_attn: the draft plan has no enc
+                # conditioning path, so drafted KV would diverge.
+                raise ValueError("speculative decoding cannot serve SSM or "
+                                 "cross-attention stacks")
+            for m, (dcfg, _dp) in self.drafts.items():
+                validate_draft(cfg, dcfg)
         expected_len = int(expected_len or max_len)
 
         n_pages = None
@@ -392,6 +448,12 @@ class Engine:
         self._admit_seq = 0            # monotone admission counter (age)
         self.n_prefix_hits = 0         # admissions served a cached prefix
         self.n_shared_prompt_tokens = 0  # prompt tokens skipped via sharing
+        # speculative counters — mirrored 1:1 by obs.on_spec_burst so the
+        # fuzz harness can assert registry == engine state in lockstep
+        self.n_spec_bursts = 0         # draft+verify rounds run
+        self.n_spec_draft_tokens = 0   # gamma per burst (always full)
+        self.n_spec_accepted_tokens = 0  # draft-origin tokens EMITTED
+        self.n_spec_tokens = 0         # all spec-path tokens emitted
         self._pool_in_use_sum = 0      # allocator occupancy, per decode step
         self.n_finished = 0   # lifetime served count # guarded-by: _finished_lock
         # guards the finished dict + the stats window deque: _emit/_reject/
@@ -449,8 +511,15 @@ class Engine:
         # reshards on admission.
         self._pspecs = pspecs
         self._sharded = sharded
+        if self.drafts and sharded:
+            # the draft-burst view gathers raw pool leaves at trace time;
+            # it has no sharding specs, so spec stays unsharded-only
+            raise ValueError("speculative decoding requires an unsharded "
+                             "engine (the draft cache view carries no "
+                             "sharding specs)")
         self._prefill_jits: dict = {}   # (bucket, with_enc) -> jit fn
         self._assign_paged_jits: dict = {}   # prefill cache_len -> jit fn
+        self._spec_draft_jits: dict = {}     # (draft_m, gamma) -> burst jit
 
     # ------------------------------------------------------------- admin --
 
@@ -465,12 +534,42 @@ class Engine:
             return "prefix"
         return "paged" if self.paged else "ring"
 
+    def _spec_guard(self, plen: int, max_new: int, spec_gamma: int,
+                    draft_m) -> Optional[str]:
+        """Why a ``spec_gamma > 0`` submission cannot be served, or None.
+        Centralized so ``submit`` and the admission-time guard (direct
+        scheduler submissions bypass ``submit``) reject identically."""
+        if spec_gamma <= 0:
+            return None
+        if not self.drafts:
+            return ("spec_gamma set but no drafts registered "
+                    "(pass drafts= to the Engine constructor)")
+        if draft_m is not None and draft_m not in self.drafts:
+            return (f"draft_m={draft_m} not registered "
+                    f"(have {sorted(self.drafts)})")
+        if self.temperature > 0.0:
+            return ("speculative decoding requires temperature 0 "
+                    "(greedy acceptance)")
+        if plen + max_new + spec_gamma > self.max_len:
+            return (f"prompt({plen}) + max_new({max_new}) + spec_gamma"
+                    f"({spec_gamma}) exceeds max_len={self.max_len} "
+                    f"(the candidate span must fit the page table)")
+        return None
+
     def submit(self, prompt, max_new: int, *, enc=None,
+               spec_gamma: int = 0, draft_m: Optional[int] = None,
                strict: bool = False) -> int:
         """Queue a request; returns its id. ``prompt`` 1-D int tokens.
 
-        An unservable submission (empty prompt, ``max_new < 1``, or
-        prompt + max_new > max_len) is REJECTED-WITH-ERROR: the request is
+        ``spec_gamma > 0`` opts this request into speculative decoding
+        (γ drafted tokens per step through the ``drafts`` registry;
+        ``draft_m`` picks the linearization depth, default the first
+        registered). Spec requests must satisfy
+        ``prompt + max_new + spec_gamma <= max_len``.
+
+        An unservable submission (empty prompt, ``max_new < 1``,
+        prompt + max_new > max_len, or an unservable spec request) is
+        REJECTED-WITH-ERROR: the request is
         recorded terminally (``Request.error`` set, surfaced in
         ``finished`` / ``n_rejected``, excluded from latency percentiles)
         and its rid still returned — the SAME surface the admission-time
@@ -487,8 +586,13 @@ class Engine:
         elif prompt.size + max_new > self.max_len:
             err = (f"prompt({prompt.size}) + max_new({max_new}) exceeds "
                    f"engine max_len={self.max_len}")
+        elif (serr := self._spec_guard(prompt.size, max_new, spec_gamma,
+                                       draft_m)) is not None:
+            err = serr
         else:
-            req = self.scheduler.make_request(prompt, max_new, enc=enc)
+            req = self.scheduler.make_request(prompt, max_new, enc=enc,
+                                              spec_gamma=spec_gamma,
+                                              draft_m=draft_m)
             self.scheduler.submit_request(req)
             if self.obs is not None:
                 self.obs.on_submit(req, len(self.scheduler))
@@ -535,7 +639,8 @@ class Engine:
         return prompt_len, self.max_len, False
 
     def _prefill_fn(self, token_len: int, cache_len: int, masked: bool,
-                    with_enc: bool, prefix_pages: int = 0):
+                    with_enc: bool, prefix_pages: int = 0,
+                    n_logits: int = 1):
         """Jit cache keyed on the full prefill plan — the plan is computed
         once per admission in ``_admit`` and passed through, so the cached
         function can never disagree with the caller about cache width or
@@ -543,8 +648,12 @@ class Engine:
         (prefix sharing): the jit additionally takes the engine's paged
         cache, a (prefix_pages,) physical-page table and the traced prefix
         token count, and the tokens are the suffix only; the bucket count
-        is a power of two so the jit cache stays O(log²) in the plan."""
-        key = (token_len, cache_len, masked, with_enc, prefix_pages)
+        is a power of two so the jit cache stays O(log²) in the plan.
+        ``n_logits`` > 1 is the speculative VERIFIER: the last n_logits
+        valid rows come back (oldest first) so one cache-extend scores a
+        whole candidate block."""
+        key = (token_len, cache_len, masked, with_enc, prefix_pages,
+               n_logits)
         fn = self._prefill_jits.get(key)
         if fn is None:
             cfg, paged = self.cfg, self.paged
@@ -556,12 +665,13 @@ class Engine:
                                    cache_len=cache_len, paged=paged,
                                    valid_len=valid_len if masked else None,
                                    prefix_cache=pool, prefix_tbl=ptbl,
-                                   prefix_len=plen0)
+                                   prefix_len=plen0, n_logits=n_logits)
             else:
                 def _prefill(p, tokens, valid_len, enc=None):
                     return prefill(cfg, p, tokens, enc=enc,
                                    cache_len=cache_len, paged=paged,
-                                   valid_len=valid_len if masked else None)
+                                   valid_len=valid_len if masked else None,
+                                   n_logits=n_logits)
 
             if self._sharded:
                 from repro.launch.specs import cache_shapes
@@ -721,24 +831,36 @@ class Engine:
         or past a slot's first divergent page, so a faulted page is never
         a shared one — sharing needs no copy here."""
         for slot in range(self.n_slots):
-            if self.slot_req[slot] is None:
+            req = self.slot_req[slot]
+            if req is None:
                 continue
             if self.slot_chunk_pos[slot] >= 0:
                 continue   # mid-prompt: the chunk path owns these pages
-            if self._page_window is not None:
+            g = req.spec_gamma if self.drafts else 0
+            if self._page_window is not None and not g:
+                # spec slots keep ALL pages resident: the verifier's prefix
+                # gather reads the table row from page 0 and a released
+                # (-1) entry would clip to physical page 0 — garbage KV
                 self._release_window_pages(slot, int(self.slot_pos[slot]))
-            lp = int(self.slot_pos[slot]) // self.page_size
-            if self.page_tbl[slot, lp] >= 0:
-                continue
-            while self.slot_req[slot] is not None:
-                ids = self.allocator.alloc(1)
-                if ids is not None:
-                    self.page_tbl[slot, lp] = ids[0]
-                    self.slot_pages[slot].append(ids[0])
-                    break
-                if self._reclaim_pages(1):
+            pos = int(self.slot_pos[slot])
+            # a spec slot's verify writes positions [pos, pos + g]; plain
+            # decode writes only position pos (g = 0)
+            first_pg = pos // self.page_size
+            last_pg = (pos + g) // self.page_size
+            for lp in range(first_pg, last_pg + 1):
+                if self.page_tbl[slot, lp] >= 0:
                     continue
-                self._preempt(self._youngest_active())
+                while self.slot_req[slot] is not None:
+                    ids = self.allocator.alloc(1)
+                    if ids is not None:
+                        self.page_tbl[slot, lp] = ids[0]
+                        self.slot_pages[slot].append(ids[0])
+                        break
+                    if self._reclaim_pages(1):
+                        continue
+                    self._preempt(self._youngest_active())
+                if self.slot_req[slot] is None:
+                    break   # this slot itself got preempted mid-fault
 
     def _prefix_lookup(self, req: Request) -> tuple[int, list[int]]:
         """Longest page-aligned cached prefix of the prompt; the hit pages
@@ -947,11 +1069,164 @@ class Engine:
                                      self.allocator)
         return logits
 
+    # ------------------------------------------------------- speculative --
+
+    def _spec_draft_fn(self, m: int, gamma: int):
+        """Draft-burst jit for registry entry ``m`` at width ``gamma``:
+        builds the target-pool cache view at trace time and scans γ greedy
+        decode steps. NOT donated — the target cache must survive the
+        burst untouched (the view's in-burst KV writes die with the
+        trace)."""
+        key = (m, gamma)
+        fn = self._spec_draft_jits.get(key)
+        if fn is None:
+            cfg = self.cfg
+            dcfg, _dp = self.drafts[m]
+
+            def _burst(dp, cache, token, pos, tbl):
+                view = build_draft_cache_view(cfg, dcfg, cache)
+                return draft_burst(dcfg, dp, view, token, pos, tbl, gamma)
+
+            fn = _shared_jit(("spec_draft", cfg, dcfg, gamma),
+                             lambda: jax.jit(_burst))
+            self._spec_draft_jits[key] = fn
+        return fn
+
+    def _run_spec_verify(self, slot: int, req: Request, span: np.ndarray,
+                         start: int, gamma: int):
+        """Score a candidate block with ONE cache-extend: re-prefill
+        ``span`` (the slot's tokens from its last page boundary ``start``
+        plus the γ draft tokens) with the slot's own pages [0, start/ps)
+        as the prefix, page-assign the result, and return the last γ+1
+        logits rows (oldest first — rows for positions pos..pos+γ).
+        The partial-prefill twin of ``_run_partial_prefill`` minus its
+        prompt bookkeeping: no prefix-index publication, no n_prefills /
+        prefill-token accounting — verify work is counted on the spec
+        counters so the fuzz harness's prefill oracles stay exact."""
+        ps = self.page_size
+        token_len, cache_len, masked = self._prefill_plan(len(span))
+        tokens = np.zeros(token_len, np.int32)
+        tokens[:len(span)] = span
+        start_pg = start // ps
+        pb = pow2_ceil(start_pg) if start_pg else 0
+        # enc is structurally None here: spec refuses cross-attn stacks
+        fn = self._prefill_fn(token_len, cache_len, masked, False,
+                              prefix_pages=pb, n_logits=gamma + 1)
+        args = (self.params, jnp.asarray(tokens)[None],
+                jnp.int32(len(span)))
+        if pb:
+            ptbl = np.full(pb, -1, np.int32)
+            ptbl[:start_pg] = self.page_tbl[slot, :start_pg]
+            args += (self.cache, jnp.asarray(ptbl), jnp.int32(start))
+        with (self.obs.annotate("nbl.spec_verify")
+              if self.obs is not None else _NULLCTX):
+            logits, pcache = fn(*args)
+        afn = self._assign_paged_fn(cache_len)
+        row = np.full(self._pps, -1, np.int32)
+        row[:self._pps - start_pg] = self.page_tbl[slot, start_pg:]
+        self.cache = afn(self.cache, pcache, jnp.int32(slot),
+                         jnp.asarray(row))
+        return logits
+
+    def _spec_slot_step(self, slot: int) -> int:
+        """One draft-and-verify round for a spec slot: γ greedy draft
+        tokens from the burst jit, one verifier cache-extend, per-row
+        greedy acceptance, then ROLLBACK — the slot's committed length is
+        whatever was emitted (a pure ``slot_pos`` bookkeeping fact; the
+        rejected tail's KV is dead by the write-before-attend invariant)
+        and surplus candidate-span pages go back to the pool. Returns
+        #tokens emitted."""
+        req = self.slot_req[slot]
+        assert req is not None and req.spec_gamma > 0
+        gamma = req.spec_gamma
+        m = req.draft_m if req.draft_m is not None else next(iter(self.drafts))
+        _dcfg, dparams = self.drafts[m]
+        ps = self.page_size
+        pos = int(self.slot_pos[slot])
+        t0 = time.monotonic()
+        fn = self._spec_draft_fn(m, gamma)
+        with (self.obs.annotate("nbl.spec_draft")
+              if self.obs is not None else _NULLCTX):
+            prop = fn(dparams, self.cache,
+                      jnp.asarray(self.slot_tok[slot:slot + 1, None]),
+                      jnp.asarray(self.slot_pos[slot:slot + 1]),
+                      jnp.asarray(self.page_tbl[slot:slot + 1]))
+        # host-sync: readback -- the γ draft tokens must come host-side to
+        # build the verify span (and the burst must complete before the
+        # verifier's assign donates the cache)
+        draft = np.asarray(prop[0], np.int32)               # (gamma,)
+        # committed history covers positions [0, pos]; the verify span
+        # restarts from the slot's last PAGE boundary so the prefix table
+        # covers whole pages (span length >= gamma+1 since pos >= aligned)
+        hist = np.concatenate([req.prompt,                  # host-only:
+                               np.fromiter(req.tokens, np.int32,
+                                           len(req.tokens))])
+        aligned = (pos // ps) * ps
+        span = np.concatenate([hist[aligned:], draft]).astype(np.int32)
+        logits = self._run_spec_verify(slot, req, span, aligned, gamma)
+        # host-sync: readback -- the verifier's γ+1 argmax rows drive
+        # host-side acceptance (greedy: temperature 0 by construction)
+        want = np.argmax(np.asarray(logits[0], np.float32),
+                         axis=-1).astype(np.int32)          # (gamma+1,)
+        n = int(accept_greedy(draft[None], want[None])[0])
+        block = [int(t) for t in draft[:n]] + [int(want[n])]
+        # the emission PLAN (post-truncation: max_new budget, first EOS)
+        # is computed before any _emit so the burst's obs record lands
+        # before a final token retires the request's trace
+        remaining = req.max_new - len(req.tokens)
+        plan: list[int] = []
+        acc = 0
+        for i, t in enumerate(block[:remaining]):
+            plan.append(t)
+            if i < n:
+                acc += 1
+            if self.eos_id is not None and t == self.eos_id:
+                break
+        self.n_spec_bursts += 1
+        self.n_spec_draft_tokens += gamma
+        self.n_spec_accepted_tokens += acc
+        self.n_spec_tokens += len(plan)
+        if self.obs is not None:
+            self.obs.on_spec_burst(req, t0, time.monotonic(), gamma, acc,
+                                   len(plan))
+        now = time.monotonic()
+        for t in plan:
+            self.slot_pos[slot] += 1
+            self._emit(req, slot, t, now)
+        if self.slot_req[slot] is not None:
+            # rollback: drop pages strictly beyond the one the slot's next
+            # write (position slot_pos) lands in — the rejected tail's
+            # pages are always private (aligned/ps >= any shared page)
+            freed = release_tail_pages(self.page_tbl[slot],
+                                       int(self.slot_pos[slot]), ps,
+                                       self.allocator)
+            if freed:
+                gone = set(freed)
+                self.slot_pages[slot] = [p for p in self.slot_pages[slot]
+                                         if p not in gone]
+        return len(plan)
+
+    def _fault_pages(self, req: Request) -> int:
+        """Worst-case pages this request can fault in ONE step once
+        decoding: 1 (the next boundary crossing), plus the candidate-span
+        pages a spec request's verifier may need (γ extra positions)."""
+        if req.spec_gamma > 0 and self.drafts:
+            return 1 + pages_per_seq(req.spec_gamma, self.page_size)
+        return 1
+
+    def _fault_reserve(self) -> int:
+        """Headroom pages for everything in flight (the per-request fault
+        bound summed) — spec requests reserve their candidate span, so
+        admission cannot trade itself for a next-step preemption."""
+        return sum(self._fault_pages(self.slot_req[s])
+                   for s in self.active_slots)
+
     def _can_admit(self, req: Request, n_shared: int = 0) -> bool:
         """Paged admission gate, in REFERENCED pages (shared prefix pages
         are already referenced and bill nothing here): the prompt's NEW
-        pages must be free, plus one page of headroom per in-flight request
-        (each may fault a page on the next boundary — admitting into that
+        pages must be free, plus fault headroom per in-flight request
+        (each may fault a page on the next boundary, γ+1 candidate-span
+        pages for spec requests — admitting into that
         reserve would just trade the admission for a preemption). A
         page-aligned prompt faults a fresh page on its very first decode
         write, so it counts in the reserve too. Under pressure, LRU
@@ -968,12 +1243,13 @@ class Engine:
             first_end = min(n_shared * self.page_size + self.chunk_tokens,
                             plen)
             need = (pages_per_seq(first_end, self.page_size) - n_shared
-                    + len(self.active_slots))
+                    + self._fault_reserve())
             return (self.allocator.free_pages >= need
                     or self._reclaim_pages(need))
         npg = pages_per_seq(plen, self.page_size)
-        own_fault = 1 if plen % self.page_size == 0 else 0
-        need = (npg - n_shared) + own_fault + len(self.active_slots)
+        own_fault = self._fault_pages(req) \
+            if plen % self.page_size == 0 else self._fault_pages(req) - 1
+        need = (npg - n_shared) + own_fault + self._fault_reserve()
         return self.allocator.free_pages >= need or self._reclaim_pages(need)
 
     def _chunk_step(self) -> int:
@@ -1076,6 +1352,13 @@ class Engine:
                              f"({req.max_new}) exceeds max_len"
                              f"={self.max_len}")
                 continue
+            serr = self._spec_guard(len(req.prompt), req.max_new,
+                                    req.spec_gamma, req.draft_m)
+            if serr is not None:
+                # same guard submit() runs: direct scheduler submissions
+                # must not reach the spec path unservable
+                self._reject(req, serr)
+                continue
             n_shared, shared_ids = self._prefix_lookup(req)
             if not self._can_admit(req, n_shared):
                 if n_shared:
@@ -1101,20 +1384,45 @@ class Engine:
             if st is not None:
                 st["n_chunking"] = len(active) - len(decoding)
             active = decoding
+        if self.drafts:
+            # spec slots decode on their OWN draft+verify path — one round
+            # each, then they sit out this step's batched decode
+            spec = [s for s in active if self.slot_req[s].spec_gamma > 0]
+            for slot in spec:
+                emitted += self._spec_slot_step(slot)
+            sset = set(spec)
+            # a spec round can retire its slot mid-list; re-filter
+            active = [s for s in active
+                      if s not in sset and self.slot_req[s] is not None]
         if not active:
             return emitted
         token = jnp.asarray(self.slot_tok[:, None])
-        if self.chunked and len(active) < len(self.active_slots):
+        live_spec = [s for s in self.active_slots
+                     if self.slot_req[s].spec_gamma > 0] \
+            if self.drafts else []
+        if self.chunked and np.any(self.slot_chunk_pos >= 0) or live_spec:
             # chunking slots ride the batched decode fully masked: pos -1
             # gives them valid length 0, and the KV write's page index
             # (-1 // page_size = -1) wraps to the table row's LAST column
             # — always unallocated mid-prompt (filled < plen <= max_len-1
             # and page-aligned), so the scatter drops it.
             posv = self.slot_pos.copy()
-            posv[self.slot_chunk_pos >= 0] = -1
+            if self.chunked:
+                posv[self.slot_chunk_pos >= 0] = -1
+            posv[live_spec] = -1
             pos = jnp.asarray(posv)
         else:
             pos = jnp.asarray(self.slot_pos)
+        tbl = self.page_tbl if self.paged else None
+        if live_spec:
+            # spec slots CANNOT use the last-column trick: with
+            # prompt + max_new + γ == max_len the row's last column can be
+            # legitimately allocated and holds committed KV — a wrapped
+            # masked write would corrupt it. Hand the decode a copy with
+            # those rows fully unallocated (writes sanitized away,
+            # attention reads nothing).
+            tbl = self.page_tbl.copy()
+            tbl[live_spec, :] = -1
         if st is not None:
             st["n_decoding"] = len(active)
             td0 = time.monotonic()
@@ -1123,7 +1431,7 @@ class Engine:
             if self.paged:
                 logits, self.cache = self._decode_jit(
                     self.params, token, self.cache, pos,
-                    jnp.asarray(self.page_tbl))
+                    jnp.asarray(tbl))
                 self._pool_in_use_sum += self.allocator.in_use
             else:
                 logits, self.cache = self._decode_jit(self.params, token,
@@ -1216,6 +1524,17 @@ class Engine:
                      prefill_chunk_tokens=self.chunk_tokens,
                      n_interleaved_decode_steps=
                      self.n_interleaved_decode_steps)
+        if self.drafts:
+            s.update(
+                n_spec_bursts=self.n_spec_bursts,
+                n_spec_draft_tokens=self.n_spec_draft_tokens,
+                n_spec_accepted_tokens=self.n_spec_accepted_tokens,
+                n_spec_tokens=self.n_spec_tokens,
+                # emitted tokens per verifier call — the speculative win
+                spec_tokens_per_burst=(self.n_spec_tokens
+                                       / max(1, self.n_spec_bursts)),
+                spec_acceptance_rate=(self.n_spec_accepted_tokens
+                                      / max(1, self.n_spec_draft_tokens)))
         return s
 
 
@@ -1380,9 +1699,13 @@ class AsyncEngine:
 
     # ------------------------------------------------------ client surface
 
-    def submit_stream(self, prompt, max_new: int, *, enc=None) -> Stream:
+    def submit_stream(self, prompt, max_new: int, *, enc=None,
+                      spec_gamma: int = 0,
+                      draft_m: Optional[int] = None) -> Stream:
         """Queue a request and return its live token :class:`Stream`.
-        Thread-safe. Unservable or over-capacity submissions return a
+        Thread-safe. ``spec_gamma``/``draft_m`` opt the request into
+        speculative decoding (see :meth:`Engine.submit`). Unservable or
+        over-capacity submissions return a
         stream already ended with ``status="rejected"`` (reject-with-error
         backpressure; ``stream.error`` says why)."""
         if self._stop:
@@ -1399,7 +1722,9 @@ class AsyncEngine:
                         f"(max_pending={self.max_pending} requests live)",
                         enc=enc)
                 else:
-                    rid = self.engine.submit(prompt, max_new, enc=enc)
+                    rid = self.engine.submit(prompt, max_new, enc=enc,
+                                             spec_gamma=spec_gamma,
+                                             draft_m=draft_m)
             finally:
                 self._expect_early = False
             s = Stream(rid)

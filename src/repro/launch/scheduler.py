@@ -78,6 +78,13 @@ class Request:
     # monotonic clock, and a tie would turn the chunked engine's
     # steal-only-from-younger rule into a mutual permanent suspend.
     admit_seq: int = 0
+    # speculative decoding (launch/engine.py spec mode): spec_gamma > 0
+    # opts this request into draft-and-verify decode — the drafter proposes
+    # spec_gamma tokens per step and the verifier scores the block in one
+    # cache-extend pass. draft_m picks which registered NBL drafter to use
+    # (None = the engine's default drafter).
+    spec_gamma: int = 0
+    draft_m: Optional[int] = None
 
     @property
     def latency(self) -> float:
@@ -170,6 +177,7 @@ class Scheduler:
         self._lock = threading.Lock()
 
     def make_request(self, prompt, max_new: int, *, enc=None,
+                     spec_gamma: int = 0, draft_m: Optional[int] = None,
                      now: Optional[float] = None) -> Request:
         """Build a Request with a fresh rid WITHOUT queueing or validating
         it — the engine's reject-with-error paths (oversize submit,
@@ -180,6 +188,7 @@ class Scheduler:
         return Request(rid=rid,
                        prompt=np.asarray(prompt, np.int32).reshape(-1),
                        max_new=max_new, enc=enc,
+                       spec_gamma=spec_gamma, draft_m=draft_m,
                        t_submit=time.monotonic() if now is None else now)
 
     def submit(self, prompt, max_new: int, *, enc=None,

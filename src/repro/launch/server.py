@@ -18,7 +18,13 @@ carries the ``rid`` it belongs to, so streams interleave safely.
 client -> server ops::
 
     {"op": "submit", "prompt": [int, ...], "max_new": int,
-     "stream": bool (default true), "tag": any (echoed back)}
+     "stream": bool (default true), "tag": any (echoed back),
+     "spec_gamma": int (default 0), "draft_m": int | null}
+        spec_gamma > 0 opts the request into speculative decoding —
+        served only when the server registered a drafter (--draft-m);
+        draft_m picks the registered linearization depth. An unservable
+        spec submission (no drafter, temperature > 0, span past max_len)
+        is rejected-with-error like any other bad submit.
     {"op": "cancel", "rid": int}     cancel in ANY lifecycle state; scoped
                                      to rids submitted on THIS connection
     {"op": "stats"}                  engine stats() + allocator occupancy
@@ -229,6 +235,9 @@ class NBLServer:
         try:
             prompt = np.asarray(msg["prompt"], np.int32).reshape(-1)
             max_new = int(msg["max_new"])
+            spec_gamma = int(msg.get("spec_gamma", 0))
+            draft_m = msg.get("draft_m")
+            draft_m = int(draft_m) if draft_m is not None else None
         except Exception as e:
             send({"event": "error", "error": f"bad submit: {e}"})
             return
@@ -239,7 +248,9 @@ class NBLServer:
         # the live ones, plus whatever finished since the last submit
         owned[:] = [t for t in owned if not t.done]
         try:
-            s = self.aeng.submit_stream(prompt, max_new)
+            s = self.aeng.submit_stream(prompt, max_new,
+                                        spec_gamma=spec_gamma,
+                                        draft_m=draft_m)
         except RuntimeError as e:
             # engine shut down / step loop died: still an EVENT (the
             # docstring's promise), never a dropped connection
@@ -277,6 +288,14 @@ def _build_engine(args) -> Engine:
         kw.update(chunked_prefill=True)
         if args.prefill_chunk_tokens is not None:
             kw.update(prefill_chunk_tokens=args.prefill_chunk_tokens)
+    if args.draft_m is not None:
+        # zero-map NBL drafter: structurally complete (and exactness holds
+        # regardless of draft quality), so the server needs no calibration
+        # pass — a calibrated registry is a deployment concern
+        from repro.launch.speculative import make_nbl_draft
+        kw.update(paged=True, page_size=args.page_size,
+                  drafts={args.draft_m:
+                          make_nbl_draft(cfg, params, args.draft_m)})
     if args.expected_len is not None:
         kw.update(expected_len=args.expected_len)
     if not args.no_obs:
@@ -315,6 +334,10 @@ def main(argv: Optional[list] = None) -> int:
     ap.add_argument("--shared-prefix-len", type=int, default=0)
     ap.add_argument("--chunked-prefill", action="store_true")
     ap.add_argument("--prefill-chunk-tokens", type=int, default=None)
+    ap.add_argument("--draft-m", type=int, default=None,
+                    help="register an m-deepest-layers NBL self-drafter "
+                         "(zero maps) so clients may submit with "
+                         "spec_gamma > 0; implies --paged")
     ap.add_argument("--max-pending", type=int, default=64)
     ap.add_argument("--step-delay-s", type=float, default=0.0,
                     help="sleep after every engine step (testing knob: "

@@ -62,6 +62,14 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
                      of its OWN prompt already in the pools — the same
                      partial-prefill jit as prefill_shared, prefix_tbl
                      pointing at the request's earlier chunks)
+      spec_verify -> {"tokens", "prefix_tbl", "prefix_len", "cache"}
+                     (speculative VERIFY: the engine's candidate-block
+                     cache-extend — a seq_len-token span (page tail +
+                     γ draft tokens, batch=1) resuming behind the slot's
+                     own committed pages through the same pow2-bucketed
+                     partial-prefill jit as prefill_chunked; the γ+1
+                     logits rows come from prefill's n_logits window, so
+                     the lowered graph matches the serving jit)
     """
     b, s = shape.global_batch, shape.seq_len
     dt = jnp.dtype(cfg.compute_dtype)
@@ -114,4 +122,16 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
                 "prefix_tbl": sds((pb,), jnp.int32),
                 "prefix_len": sds((), jnp.int32),
                 "cache": paged_cache_shapes(cfg, b, 8 * s)}
+    if shape.kind == "spec_verify":
+        from repro.models.paging import DEFAULT_PAGE_SIZE, pages_per_seq
+        # verify resumes behind 3*s committed tokens (prompt + accepted
+        # decode) — the 4*s max_len sizes the table rows/pools; batch is
+        # 1 per slot (the engine verifies spec slots one at a time)
+        pre = 3 * s
+        pb = pages_per_seq(pre, DEFAULT_PAGE_SIZE)
+        pb = 1 << max(0, (pb - 1).bit_length())
+        return {"tokens": sds((1, s), jnp.int32),
+                "prefix_tbl": sds((pb,), jnp.int32),
+                "prefix_len": sds((), jnp.int32),
+                "cache": paged_cache_shapes(cfg, 1, 4 * s)}
     raise ValueError(shape.kind)

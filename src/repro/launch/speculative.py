@@ -1,88 +1,282 @@
-"""Speculative decoding (draft-and-verify) with an NBL-compressed verifier
-— the paper's §E.2/Table 6 compounding-speed-up experiment.
+"""Speculative decoding (draft-and-verify) — the paper's §E.2/Table 6
+compounding-speed-up experiment, in two tiers:
+
+ENGINE-NATIVE policy (the production path, launch/engine.py spec mode)
+    NBL hands the serving engine a free self-drafter: the SAME weights
+    under a more aggressive linearization plan (``make_nbl_draft`` — the
+    m deepest attention layers replaced by their LMMSE linear maps) are a
+    cheap approximation of the full model. Because ``nbl_variant``
+    linearizes the DEEPEST layers, every attention layer the draft still
+    carries is one of the target's SHALLOW layers — so the draft can
+    attend the target's own paged KV through the slot's page table
+    (``build_draft_cache_view``) and needs no cache of its own.
+    ``draft_burst`` proposes γ greedy tokens per slot in one scanned jit;
+    the engine then verifies the whole candidate block with a single
+    cache-extend partial prefill (γ+1 logits rows), accepts the longest
+    agreeing prefix plus one corrected token, and rolls back by a pure
+    length decrement (pages are position-aligned: no kpos to repair —
+    see docs/speculative.md for the rollback invariant).
+
+STANDALONE reference (``speculative_generate``)
+    The seed-era off-engine loop, kept as the parity oracle the engine
+    path and the paper-table experiments are checked against.
+    Verification re-runs a full forward over the prefix (O(n²) total —
+    fine for CPU-scale tests and for counting verifier calls). Fixed
+    relative to the seed: ``eos_id`` stops a row at end-of-sequence
+    (parity with ``generate(eos_id=...)``), acceptance is PER-ROW (one
+    disagreeing row no longer caps the whole batch at the batch-min
+    prefix), and stats count post-truncation — tokens beyond ``max_new``
+    or EOS never inflate ``acceptance_rate``.
 
 Greedy speculative decoding is EXACT: the emitted sequence equals the
-verifier's own greedy decode (asserted in tests). The draft proposes γ
-tokens autoregressively; the verifier scores the whole candidate block in
-one forward pass; the longest agreeing prefix is accepted plus one
-corrected token. With an NBL-compressed verifier the per-call verifier
-cost also drops (K−m)/K-style, which is why the paper's NBL-12+EAGLE-3
-compounds to 4.07×.
-
-Verification here re-runs a full forward over the prefix (O(n²) total —
-fine for CPU-scale tests and for counting verifier calls); a production
-deployment would verify with a multi-token cache-extend step.
+verifier's own greedy decode (asserted in tests and in-benchmark),
+regardless of draft quality — draft quality only moves the acceptance
+rate, i.e. the speed.
 """
 from __future__ import annotations
+
+from typing import Mapping, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import apply
+from repro.core.surgery import compress_params, nbl_variant
+from repro.models import apply, decode_step
 
+_DRAFT_KINDS = ("attn", "nbl", "drop", "nbl_block", "drop_block")
+
+
+# --------------------------------------------------------------------------
+# Engine-native drafter plumbing
+# --------------------------------------------------------------------------
+
+def attn_sites(cfg: ModelConfig) -> list[tuple[int, int, int]]:
+    """(group, unit, repeat) coordinates of every caching attention
+    invocation, in flat stack order — the ordinal axis the draft/target
+    KV-sharing map is built on (shared blocks count once per invocation,
+    exactly like their page pools in models/paging.init_paged_cache)."""
+    sites = []
+    for gi, g in enumerate(cfg.stack):
+        for r in range(g.repeat):
+            for u, blk in enumerate(g.unit):
+                if blk.kind == "attn":
+                    sites.append((gi, u, r))
+    return sites
+
+
+def validate_draft(cfg: ModelConfig, dcfg: ModelConfig) -> None:
+    """Structural gate for KV-sharing self-speculation: the draft must be
+    a pure linearization of the target — same embedding/head geometry,
+    same KV layout, and its surviving attention layers must be a PREFIX of
+    the target's attention ordinals (window-for-window), because the
+    draft attends the target's pages through the shared table and ordinal
+    j of the draft reads ordinal j of the target. ``nbl_variant`` drafts
+    satisfy this by construction (it linearizes the deepest layers);
+    anything else raises here, at registration, not mid-serve."""
+    for attr in ("d_model", "vocab_size", "n_kv_heads", "head_dim",
+                 "compute_dtype"):
+        if getattr(cfg, attr) != getattr(dcfg, attr):
+            raise ValueError(f"draft/target {attr} mismatch: "
+                             f"{getattr(dcfg, attr)} vs {getattr(cfg, attr)}")
+    bad = [b.kind for b in dcfg.blocks() if b.kind not in _DRAFT_KINDS]
+    if bad:
+        raise ValueError(f"draft stack carries non-linearizable blocks "
+                         f"{sorted(set(bad))} — KV sharing needs a pure "
+                         f"attn/nbl/drop plan")
+    tw = [b.window for b in cfg.blocks() if b.kind == "attn"]
+    dw = [b.window for b in dcfg.blocks() if b.kind == "attn"]
+    if len(dw) > len(tw):
+        raise ValueError(f"draft has {len(dw)} attention layers, target "
+                         f"only {len(tw)} — the draft cannot be deeper")
+    if dw != tw[:len(dw)]:
+        raise ValueError(f"draft attention windows {dw} are not a prefix "
+                         f"of the target's {tw} — ordinal j of the draft "
+                         f"must read the KV ordinal j of the target wrote")
+
+
+def build_draft_cache_view(cfg: ModelConfig, dcfg: ModelConfig, cache):
+    """Draft-shaped cache tree over the TARGET's page pools: attention
+    ordinal j of the draft maps to the pools of attention ordinal j of the
+    target (validate_draft guarantees the prefix property), restacked to
+    the draft's scan grouping. Built at trace time inside the burst jit —
+    the gather materializes per-ordinal pool copies whose in-burst KV
+    writes are carried across the γ scan steps (a draft token must attend
+    the burst's earlier draft tokens) and DISCARDED at burst end, so the
+    target's committed pools are never mutated by drafting. Non-attention
+    draft blocks (nbl/drop) carry no cache: None leaves, matching
+    init_paged_cache."""
+    tsites = attn_sites(cfg)
+    by_leaf: dict = {}
+    for j, (gi, u, r) in enumerate(attn_sites(dcfg)):
+        by_leaf.setdefault((gi, u), {})[r] = j
+    groups = []
+    for gi, g in enumerate(dcfg.stack):
+        blocks = []
+        for u, blk in enumerate(g.unit):
+            if blk.kind == "attn":
+                ks, vs = [], []
+                for r in range(g.repeat):
+                    tgi, tu, tr = tsites[by_leaf[(gi, u)][r]]
+                    leaf = cache["groups"][tgi]["blocks"][tu]
+                    ks.append(leaf["k_pages"][tr])
+                    vs.append(leaf["v_pages"][tr])
+                blocks.append({"k_pages": jnp.stack(ks),
+                               "v_pages": jnp.stack(vs)})
+            else:
+                blocks.append(None)
+        groups.append({"blocks": blocks})
+    return {"groups": groups}
+
+
+def draft_burst(dcfg: ModelConfig, dparams, view, token, pos, page_tbl,
+                gamma: int):
+    """Propose ``gamma`` greedy draft tokens autoregressively from one
+    scanned jit body. ``token`` (B,1) int32 is the slot's last emitted
+    (uncached) token; ``pos`` (B,) its position; ``page_tbl`` (B, pps) the
+    slot's table row; ``view`` a build_draft_cache_view tree. The view
+    rides the scan CARRY so draft token i+1 attends draft token i's KV;
+    its writes die with the trace. Returns (B, gamma) int32 proposals."""
+    def body(carry, _):
+        tok, p, vw = carry
+        logits, vw = decode_step(dcfg, dparams, tok, vw, p, page_tbl=page_tbl)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return (nxt[:, None], p + 1, vw), nxt
+
+    (_, _, _), toks = jax.lax.scan(
+        body, (token, jnp.asarray(pos, jnp.int32), view), None, length=gamma)
+    return jnp.moveaxis(toks, 0, 1)                  # (B, gamma)
+
+
+def accept_greedy(proposal: np.ndarray, want: np.ndarray) -> np.ndarray:
+    """Per-row greedy acceptance. ``proposal`` (B, γ) draft tokens;
+    ``want`` (B, γ+1) the verifier's argmax rows — entry [i] is its
+    prediction for the position proposal[:, i] sits at, entry [γ] the
+    bonus token after a full accept. Both must be HOST numpy arrays
+    (callers read tokens back before acceptance — this stays sync-free).
+    Returns (B,) accepted prefix lengths; row r then emits
+    proposal[r, :n] plus want[r, n]."""
+    gamma = proposal.shape[1]
+    agree = want[:, :gamma] == proposal
+    return np.where(agree.all(1), gamma, np.argmin(agree, axis=1))
+
+
+def make_nbl_draft(cfg: ModelConfig, params, m: int,
+                   linear_maps: Optional[Mapping[int, tuple]] = None
+                   ) -> tuple[ModelConfig, dict]:
+    """Self-speculative drafter: the SAME model under an m-deepest-layers
+    NBL plan. ``linear_maps`` ({layer: (W, b)} from core.calibrate) gives
+    a calibrated draft; None installs ZERO maps — the linearized layers
+    become identity residual passes, useless as an approximation but
+    structurally complete, which is all parity tests and serving smokes
+    need (greedy acceptance is exact regardless of draft quality; quality
+    only moves the acceptance rate). m=0 returns (cfg, params) unchanged
+    — a "draft" that is the target itself, accepting everything."""
+    if m == 0:
+        return cfg, params
+    dcfg = nbl_variant(cfg, m)
+    ids = list(cfg.attn_layer_indices())[-m:]
+    if linear_maps is None:
+        d = cfg.d_model
+        zero = (np.zeros((d, d), np.float32), np.zeros((d,), np.float32))
+        linear_maps = {i: zero for i in ids}
+    dparams = compress_params(cfg, params, dcfg, ids, "nbl",
+                              linear_maps=linear_maps)
+    return dcfg, dparams
+
+
+# --------------------------------------------------------------------------
+# Standalone reference path (parity oracle)
+# --------------------------------------------------------------------------
 
 def speculative_generate(draft_cfg: ModelConfig, draft_params,
                          verify_cfg: ModelConfig, verify_params,
                          prompts: jax.Array, *, max_new: int,
-                         gamma: int = 4) -> tuple[np.ndarray, dict]:
-    """Greedy speculative decoding. prompts: (B, S). Returns
-    (tokens (B, max_new), stats{verifier_calls, draft_tokens, accepted})."""
-    b = prompts.shape[0]
+                         gamma: int = 4,
+                         eos_id: Optional[int] = None
+                         ) -> tuple[np.ndarray, dict]:
+    """Greedy speculative decoding, off-engine. prompts: (B, S). Returns
+    (tokens (B, max_new) int32, stats). Rows are RAGGED under ``eos_id``
+    or per-row acceptance: each row stops at its own first EOS (or
+    max_new) and shorter rows are zero-padded on the right —
+    ``stats["row_lengths"]`` carries the true per-row counts. Stats count
+    POST-truncation: a draft token proposed past a row's remaining budget
+    (or emitted past its EOS) never inflates ``draft_tokens``/
+    ``accepted``, so ``acceptance_rate`` measures tokens that could
+    actually land."""
+    prompts = np.asarray(prompts, np.int32)
+    b, s0 = prompts.shape
+    width = s0 + max_new + gamma                   # fixed: exactly 2 traces
 
-    # Built ONCE per generate call, outside the decode loop, closing over
-    # this call's params (arrays — unhashable, so the shared registry
-    # cannot key them); the loop below reuses the same two wrappers, so
-    # the per-call trace cost is two traces, not O(tokens). (A dead
-    # `greedy_next` jit that took (cfg, params) as a TRACED argument —
-    # which would have crashed if ever called, ModelConfig is no pytree —
-    # was deleted when the jit-discipline pass first flagged this file.)
+    # Built ONCE per generate call, closing over this call's params
+    # (arrays — unhashable, so the shared registry cannot key them); the
+    # padded buffer keeps shapes CONSTANT across rounds, so the loop costs
+    # two traces total, not one per grown length. draft_next takes the
+    # per-row valid lengths and reads each row's logits at its OWN last
+    # position — rows of different lengths share one batched call.
     draft_next = jax.jit(  # nbl: disable=jit-discipline -- closes over this call's draft params; built once per call, outside the loop
-        lambda t: jnp.argmax(apply(draft_cfg, draft_params, t)[0][:, -1],
-                             axis=-1).astype(jnp.int32))
+        lambda t, l: jnp.take_along_axis(
+            jnp.argmax(apply(draft_cfg, draft_params, t)[0], axis=-1),
+            (jnp.asarray(l, jnp.int32) - 1)[:, None], axis=1
+        )[:, 0].astype(jnp.int32))
     verify_block = jax.jit(  # nbl: disable=jit-discipline -- closes over this call's verifier params; built once per call, outside the loop
         lambda t: jnp.argmax(apply(verify_cfg, verify_params, t)[0],
                              axis=-1).astype(jnp.int32))
 
-    toks = np.asarray(prompts)
-    out = np.zeros((b, 0), np.int32)
+    buf = np.zeros((b, width), np.int32)
+    buf[:, :s0] = prompts
+    lens = np.full(b, s0, np.int64)                # committed tokens per row
+    out = [[] for _ in range(b)]
+    live = np.ones(b, bool)
     stats = {"verifier_calls": 0, "draft_tokens": 0, "accepted": 0}
-    while out.shape[1] < max_new:
-        # draft proposes gamma tokens
-        cand = toks
-        proposal = []
-        for _ in range(gamma):
-            nxt = np.asarray(draft_next(jnp.asarray(cand)))
-            proposal.append(nxt)
-            cand = np.concatenate([cand, nxt[:, None]], axis=1)
-        proposal = np.stack(proposal, axis=1)            # (B, gamma)
-        stats["draft_tokens"] += gamma * b
-
-        # verifier scores the whole candidate block in ONE call
-        pred = np.asarray(verify_block(jnp.asarray(cand)))  # (B, S+gamma)
+    while live.any():
+        # draft proposes gamma tokens per row (dead rows ride the batched
+        # calls; their outputs are ignored below)
+        proposal = np.zeros((b, gamma), np.int32)
+        for i in range(gamma):
+            nxt = np.asarray(draft_next(jnp.asarray(buf),
+                                        jnp.asarray(lens + i)))
+            proposal[:, i] = nxt
+            buf[np.arange(b), lens + i] = nxt      # provisional: may roll back
+        # verifier scores every candidate block in ONE call
+        pred = np.asarray(verify_block(jnp.asarray(buf)))   # (B, width)
         stats["verifier_calls"] += 1
-        base = toks.shape[1]
-        # verifier's prediction AT position base-1+i is the token it wants
-        # at base+i; accept while it agrees with the draft. The slice is
-        # gamma+1 wide: entry [n] is the correction token after n accepts
-        # (for n == gamma it is the free bonus token).
-        want = pred[:, base - 1:base + gamma]            # (B, gamma+1)
-        agree = (want[:, :gamma] == proposal)
-        n_acc = np.where(agree.all(1), gamma,
-                         np.argmin(agree, axis=1))       # per-row prefix len
-        n = int(n_acc.min())                             # lockstep batch
-        emitted = (proposal[:, :n] if n else
-                   np.zeros((b, 0), np.int32))
-        # plus the verifier's correction/bonus token
-        correction = want[:, n][:, None]
-        block = np.concatenate([emitted, correction], axis=1)
-        stats["accepted"] += n * b
-        out = np.concatenate([out, block], axis=1)
-        toks = np.concatenate([toks, block], axis=1)
-    out = out[:, :max_new]
+        # verifier's prediction AT position lens-1+i is the token it wants
+        # at lens+i; the gather is gamma+1 wide — entry [n] is the
+        # correction token after n accepts (n == gamma: the bonus token).
+        idx = lens[:, None] - 1 + np.arange(gamma + 1)[None, :]
+        want = np.take_along_axis(pred, idx, axis=1)        # (B, gamma+1)
+        n_acc = accept_greedy(proposal, want)               # per-row prefix
+        for r in np.nonzero(live)[0]:
+            remaining = max_new - len(out[r])
+            # post-truncation accounting: only proposals that fit the
+            # row's remaining budget count as draft work
+            eff = min(gamma, remaining)
+            stats["draft_tokens"] += eff
+            n = int(n_acc[r])
+            block = [int(t) for t in proposal[r, :n]] + [int(want[r, n])]
+            before = len(out[r])
+            for i, t in enumerate(block[:remaining]):
+                out[r].append(t)
+                if i < n:
+                    stats["accepted"] += 1
+                if eos_id is not None and t == eos_id:
+                    live[r] = False
+                    break
+            if len(out[r]) >= max_new:
+                live[r] = False
+            # commit the row's emitted tokens (overwriting any rejected
+            # proposal tokens: the buffer tail is junk until rewritten)
+            emitted = out[r][before:]
+            buf[r, lens[r]:lens[r] + len(emitted)] = emitted
+            lens[r] += len(emitted)
+    padded = np.zeros((b, max_new), np.int32)
+    for r in range(b):
+        padded[r, :len(out[r])] = out[r]
+    stats["row_lengths"] = [len(o) for o in out]
     stats["acceptance_rate"] = stats["accepted"] / max(stats["draft_tokens"],
                                                        1)
-    stats["tokens_per_verifier_call"] = (out.shape[1]
+    stats["tokens_per_verifier_call"] = (sum(stats["row_lengths"])
                                          / max(stats["verifier_calls"], 1))
-    return out, stats
+    return padded, stats

@@ -471,6 +471,27 @@ class PrefixIndex:
         return freed
 
 
+def release_tail_pages(page_tbl_row: np.ndarray, committed_len: int,
+                       page_size: int, allocator: PageAllocator) -> list[int]:
+    """Speculative-rollback helper: free every allocated logical page of one
+    slot's table row STRICTLY beyond the page containing position
+    ``committed_len`` (the next position the slot will write). Because pages
+    are position-aligned, rejecting draft tokens needs no kpos repair — the
+    committed length itself is the rollback, and this just returns the
+    surplus candidate-span pages (always private: _ensure_decode_pages
+    allocated them fresh, shared prefix pages live at the head of the row)
+    to the pool. Mutates ``page_tbl_row`` in place (-1 = unallocated) and
+    returns the freed physical ids (possibly empty)."""
+    keep = committed_len // page_size             # last page still writable
+    freed = [int(page_tbl_row[l])
+             for l in range(keep + 1, page_tbl_row.shape[0])
+             if page_tbl_row[l] >= 0]
+    if freed:
+        page_tbl_row[keep + 1:] = -1
+        allocator.unref(freed)
+    return freed
+
+
 # --------------------------------------------------------------- stats ------
 
 def build_page_table(n_slots: int, max_len: int,

@@ -368,10 +368,16 @@ def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *,
 def prefill(cfg: ModelConfig, params: dict, tokens, *, enc=None,
             cache_len: Optional[int] = None, paged: bool = False,
             valid_len=None, prefix_cache=None, prefix_tbl=None,
-            prefix_len=None):
+            prefix_len=None, n_logits: int = 1):
     """Process the prompt, build KV/state caches, return last-token logits.
     Logits are computed at the final position only (vocab-size safe at 32k+
     contexts). Returns (logits (B,1,V), cache).
+
+    ``n_logits`` (STATIC) widens the logits window to the last n_logits
+    valid positions — (B, n_logits, V), rows ordered oldest-first so row
+    ``n_logits - 1`` is the usual last-token row. The speculative verify
+    step uses γ+1 rows to score a whole candidate block from one
+    cache-extend pass; everything else keeps the default of 1.
 
     ``paged`` builds POSITION-ALIGNED full-width caches (no ring wrap) for
     page-tiled assignment (models/paging.assign_pages). ``valid_len`` (a
@@ -413,11 +419,12 @@ def prefill(cfg: ModelConfig, params: dict, tokens, *, enc=None,
                              cache_len=cache_len, paged=paged,
                              valid_len=valid_len, prefix_tbl=prefix_tbl,
                              prefix_len=prefix_len)
+    assert 1 <= n_logits <= tokens.shape[1], (n_logits, tokens.shape)
     if valid_len is None:
-        x_last = x[:, -1:]
+        x_last = x[:, -n_logits:]
     else:
-        last = jnp.asarray(valid_len, jnp.int32) - 1
-        x_last = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)
+        start = jnp.asarray(valid_len, jnp.int32) - n_logits
+        x_last = jax.lax.dynamic_slice_in_dim(x, start, n_logits, axis=1)
     return _logits(cfg, params, x_last), cache
 
 

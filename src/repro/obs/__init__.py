@@ -107,6 +107,19 @@ class Observability:
         self.shared_tokens = r.counter(
             "nbl_shared_prompt_tokens_total",
             "prompt tokens skipped via prefix sharing")
+        self.spec_bursts = r.counter(
+            "nbl_spec_bursts_total",
+            "speculative draft-and-verify bursts (one draft scan + one "
+            "verifier cache-extend each)")
+        self.spec_draft_tokens = r.counter(
+            "nbl_spec_draft_tokens_total",
+            "draft tokens proposed by speculative bursts")
+        self.spec_accepted = r.counter(
+            "nbl_spec_accepted_tokens_total",
+            "draft-origin tokens accepted and actually emitted")
+        self.spec_tokens = r.counter(
+            "nbl_spec_tokens_total",
+            "tokens emitted by speculative bursts (accepted + corrections)")
         # --- gauges
         self.g_queue = r.gauge("nbl_queue_depth", "scheduler queue length")
         self.g_active = r.gauge("nbl_slots_active", "occupied slots")
@@ -218,6 +231,29 @@ class Observability:
     def on_prefix_hit(self, req, n_shared_tokens: int) -> None:
         self.prefix_hits.inc()
         self.shared_tokens.inc(n_shared_tokens)
+
+    def on_spec_burst(self, req, t0: float, t1: float, gamma: int,
+                      n_accepted: int, n_emitted: int) -> None:
+        """One speculative draft-and-verify burst for ``req``: γ draft
+        tokens proposed, ``n_accepted`` of them emitted (post-truncation —
+        tokens past max_new/EOS never count) plus the verifier's
+        correction for ``n_emitted`` total. Fired BEFORE the burst's
+        token emissions so the span precedes any terminal transition the
+        final token triggers."""
+        self.spec_bursts.inc()
+        self.spec_draft_tokens.inc(gamma)
+        self.spec_accepted.inc(n_accepted)
+        self.spec_tokens.inc(n_emitted)
+        if self.tracer:
+            # request tracks are FLAT (validate() forbids overlap), so the
+            # burst is spliced into the decoding span rather than nested:
+            # decoding ends at burst start and reopens at burst end — the
+            # reopened span is what retire/preempt later closes
+            self.tracer.end(req.rid, "decoding", t=t0)
+            self.tracer.begin(req.rid, "spec", t=t0, gamma=gamma)
+            self.tracer.end(req.rid, "spec", t=t1, accepted=n_accepted,
+                            emitted=n_emitted)
+            self.tracer.begin(req.rid, "decoding", t=t1)
 
     def on_prefill(self, n_tokens: int) -> None:
         self.prefills.inc()

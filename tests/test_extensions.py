@@ -11,7 +11,11 @@ from repro.core import nbl_compress
 from repro.core.lora import lora_apply, lora_finetune, lora_init
 from repro.data import ZipfMarkov, calib_factory
 from repro.eval import perplexity
-from repro.launch.speculative import speculative_generate
+from repro.launch.engine import Engine
+from repro.launch.serve import generate
+from repro.launch.speculative import (
+    accept_greedy, make_nbl_draft, speculative_generate,
+)
 from repro.launch.train import train
 from repro.models import apply, init_params
 
@@ -83,3 +87,146 @@ def test_speculative_nbl_draft_accepts_often(compressed):
     _, stats = speculative_generate(ncfg, nparams, cfg, params,
                                     prompts, max_new=12, gamma=4)
     assert stats["acceptance_rate"] > 0.3, stats
+
+
+def test_accept_greedy_is_per_row():
+    """Regression: acceptance is each row's OWN agreeing prefix, not the
+    batch minimum (the lockstep bug chained every row to the slowest
+    acceptor)."""
+    proposal = np.array([[1, 2, 3], [7, 8, 9], [4, 4, 4]], np.int32)
+    want = np.array([[1, 2, 3, 5], [7, 5, 6, 0], [0, 1, 2, 3]], np.int32)
+    np.testing.assert_array_equal(accept_greedy(proposal, want), [3, 1, 0])
+
+
+def test_speculative_rows_independent(compressed):
+    """Ragged per-row acceptance means a batched run is row-for-row
+    identical to running each prompt alone, and finishes in the SLOWEST
+    row's round count rather than the batch-min lockstep's."""
+    cfg, params, ncfg, nparams = compressed
+    proc = ZipfMarkov(cfg.vocab_size, seed=2)
+    prompts = np.asarray(proc.sample(2, 10, seed=11), np.int32)
+    batched, bstats = speculative_generate(
+        ncfg, nparams, cfg, params, jnp.asarray(prompts),
+        max_new=8, gamma=3)
+    solo_calls = []
+    for r in range(2):
+        solo, sstats = speculative_generate(
+            ncfg, nparams, cfg, params, jnp.asarray(prompts[r:r + 1]),
+            max_new=8, gamma=3)
+        np.testing.assert_array_equal(batched[r], solo[0])
+        assert bstats["row_lengths"][r] == sstats["row_lengths"][0]
+        solo_calls.append(sstats["verifier_calls"])
+    assert bstats["verifier_calls"] == max(solo_calls), \
+        (bstats["verifier_calls"], solo_calls)
+
+
+def test_speculative_eos_truncates_per_row(compressed):
+    """Regression: each row stops at its OWN first EOS (inclusive), the
+    tail stays zero-padded, and row_lengths carries the true counts."""
+    cfg, params, ncfg, nparams = compressed
+    proc = ZipfMarkov(cfg.vocab_size, seed=3)
+    prompts = jnp.asarray(proc.sample(2, 12, seed=7))
+    max_new = 10
+    ref, _ = speculative_generate(ncfg, nparams, cfg, params, prompts,
+                                  max_new=max_new, gamma=3)
+    # EOS drawn from the reference rollout so it provably fires mid-row
+    # (greedy emission is deterministic: with eos set, each row is the
+    # same stream cut at its first hit)
+    eos = int(ref[0, 2])
+    got, stats = speculative_generate(ncfg, nparams, cfg, params, prompts,
+                                      max_new=max_new, gamma=3, eos_id=eos)
+    assert stats["row_lengths"][0] <= 3
+    for r in range(2):
+        hits = np.nonzero(ref[r] == eos)[0]
+        want = ref[r][:hits[0] + 1] if hits.size else ref[r]
+        assert stats["row_lengths"][r] == len(want)
+        np.testing.assert_array_equal(got[r, :len(want)], want)
+        assert not got[r, len(want):].any()
+
+    # the engine path honors the same EOS contract — oracled against the
+    # cached-decode generate() reference (the numerics the engine runs),
+    # truncated at ITS first EOS
+    eng = Engine(cfg, params, max_len=32, n_slots=2, eos_id=eos,
+                 paged=True, page_size=4,
+                 drafts={2: make_nbl_draft(cfg, params, 2)})
+    prompt0 = np.asarray(prompts[0], np.int32)
+    rid = eng.submit(prompt0, max_new, spec_gamma=3, draft_m=2)
+    while eng.has_work:
+        eng.step()
+    oracle = np.asarray(generate(cfg, params, jnp.asarray(prompt0)[None],
+                                 max_new=max_new))[0]
+    hits = np.nonzero(oracle == eos)[0]
+    want_eng = oracle[:hits[0] + 1] if hits.size else oracle
+    np.testing.assert_array_equal(
+        np.asarray(eng.finished[rid].tokens, np.int32), want_eng)
+    assert eng.allocator.in_use == 0
+
+
+def test_speculative_stats_count_post_truncation(compressed):
+    """Regression: draft tokens proposed past a row's remaining budget no
+    longer inflate the stats. With max_new=1 every row retires in one
+    round, so exactly one draft token per row can land — gamma=5 used to
+    count five."""
+    cfg, params, ncfg, nparams = compressed
+    proc = ZipfMarkov(cfg.vocab_size, seed=4)
+    prompts = jnp.asarray(proc.sample(3, 10, seed=13))
+    _, stats = speculative_generate(ncfg, nparams, cfg, params, prompts,
+                                    max_new=1, gamma=5)
+    assert stats["verifier_calls"] == 1
+    assert stats["draft_tokens"] == 3
+    assert stats["accepted"] <= 3
+    assert stats["acceptance_rate"] <= 1.0
+    assert stats["row_lengths"] == [1, 1, 1]
+
+
+def test_engine_spec_parity_and_stats():
+    """Engine-native speculative decoding: token-exact against plain
+    generate(), zero leaked pages at drain, and the stats surface keeps
+    burst/draft/accept accounting consistent."""
+    cfg = get_config("tiny-dense")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_len=32, n_slots=2, paged=True,
+                 page_size=4, drafts={2: make_nbl_draft(cfg, params, 2)})
+    proc = ZipfMarkov(cfg.vocab_size, seed=5)
+    prompts = [np.asarray(p, np.int32) for p in proc.sample(3, 6, seed=17)]
+    rids = [eng.submit(p, 8, spec_gamma=g, draft_m=2)
+            for p, g in zip(prompts, (1, 2, 3))]
+    while eng.has_work:
+        eng.step()
+    for rid, p in zip(rids, prompts):
+        want = np.asarray(generate(cfg, params, jnp.asarray(p)[None],
+                                   max_new=8))[0]
+        np.testing.assert_array_equal(
+            np.asarray(eng.finished[rid].tokens, np.int32), want)
+    assert eng.allocator.in_use == 0
+    st = eng.stats()
+    assert st["n_spec_bursts"] > 0
+    # in an all-spec workload every token came from a burst EXCEPT each
+    # request's first, which the admission prefill emits
+    assert st["n_spec_tokens"] == sum(
+        len(eng.finished[r].tokens) for r in rids) - len(rids)
+    assert st["n_spec_accepted_tokens"] <= st["n_spec_draft_tokens"]
+    assert 0.0 <= st["spec_acceptance_rate"] <= 1.0
+
+
+def test_engine_spec_submit_gates():
+    """Every unservable spec submission is rejected-with-error, not
+    raised: span overflow, unknown draft_m, and a draftless engine."""
+    cfg = get_config("tiny-dense")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_len=32, n_slots=2, paged=True,
+                 page_size=4, drafts={2: make_nbl_draft(cfg, params, 2)})
+    prompt = np.arange(1, 9, dtype=np.int32)          # plen 8
+
+    rid = eng.submit(prompt, 24, spec_gamma=1, draft_m=2)  # 8+24+1 > 32
+    assert "max_len" in eng.finished[rid].error
+    rid = eng.submit(prompt, 8, spec_gamma=2, draft_m=7)
+    assert "draft_m" in eng.finished[rid].error
+    # the same prompt WITHOUT spec still fits: the gate is span-specific
+    rid = eng.submit(prompt, 24)
+    assert eng.finished.get(rid) is None or not eng.finished[rid].error
+
+    plain = Engine(cfg, params, max_len=32, n_slots=1, paged=True,
+                   page_size=4)
+    rid = plain.submit(prompt, 4, spec_gamma=2, draft_m=2)
+    assert "drafts" in plain.finished[rid].error

@@ -1,10 +1,14 @@
 """Serving-oracle fuzz harness: randomized workloads replayed through the
 Engine in all four serving modes (ring / paged / prefix-shared / chunked)
-plus the chunked+shared composition, asserting TOKEN-EXACT parity against
+plus the chunked+shared composition and a SPECULATIVE mode (per-request
+NBL self-drafting: γ-token draft bursts, one-shot verify, rollback —
+mixed with plain requests whenever a prompt leaves no room for a
+candidate span), asserting TOKEN-EXACT parity against
 the single-request generate() oracle and allocator/refcount invariants
 after every step. An ASYNC variant replays the same workloads through the
 AsyncEngine host loop — concurrent submit/stream/cancel from worker
-threads (cancel mid-chunking and cancel-while-prefix-referenced fall out
+threads (cancel mid-chunking, cancel-while-prefix-referenced, and
+cancel-between-spec-bursts fall out
 of the seeded cancel offsets), with the same per-step invariants hung on
 the step thread via step_cb.
 
@@ -14,7 +18,7 @@ lengths, shared-prefix structure, max_new, EOS, submission schedule (some
 requests join mid-stream), slot counts, page-pool pressure (pools shrunk to
 force preemption) and chunk sizes all vary. The deterministic suite runs
 ``NBL_FUZZ_EXAMPLES`` seeds per mode and variant (default 3; CI raises it
-to 50 for 50 x 5 modes x {sync, async} = 500 examples); the hypothesis
+to 50 for 50 x 6 modes x {sync, async} = 600 examples); the hypothesis
 property on top draws arbitrary seeds and shrinks failures, and skips
 cleanly when hypothesis is absent (tests/_hypothesis_compat.py).
 
@@ -38,6 +42,7 @@ from tests._hypothesis_compat import given, settings, st
 from repro.configs import get_config
 from repro.launch.engine import AsyncEngine, Engine
 from repro.launch.serve import generate
+from repro.launch.speculative import make_nbl_draft
 from repro.models import decode_step, init_params, prefill
 from repro.models.paging import PageAllocator, pages_per_seq
 from repro.obs import Observability
@@ -54,7 +59,15 @@ MODES = {
     # publication + mid-chunk suspension/preemption under one roof
     "chunked_shared": dict(paged=True, page_size=PAGE_SIZE,
                            chunked_prefill=True, prefix_sharing=True),
+    # per-request speculative decoding against a zero-map NBL self-draft
+    # ("spec" is a harness flag, not an Engine kwarg: _replay turns it
+    # into a drafts={} registration + per-request spec_gamma). Acceptance
+    # is near-zero with untrained maps — the point is exercising the
+    # draft/verify/rollback machinery, not the speedup.
+    "spec": dict(paged=True, page_size=PAGE_SIZE, spec=True),
 }
+
+DRAFT_M = 2
 
 ARCHS = ("tiny-dense", "tiny-swa", "tiny-gemma")
 
@@ -63,6 +76,22 @@ ARCHS = ("tiny-dense", "tiny-swa", "tiny-gemma")
 def _setup(arch):
     cfg = get_config(arch)
     return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+@functools.lru_cache(maxsize=None)
+def _draft(arch):
+    """Zero-map NBL drafter (deepest DRAFT_M attn layers -> identity
+    residual) over the target's own params — shared per arch so every
+    example reuses one draft-jit family."""
+    cfg, params = _setup(arch)
+    return make_nbl_draft(cfg, params, DRAFT_M)
+
+
+def _spec_gamma(prompt, max_new, i: int) -> int:
+    """Deterministic per-request draft length: cycles 1..3, clamped so
+    prompt + max_new + gamma fits max_len (0 -> the request rides the
+    plain decode path, mixing spec and non-spec traffic in one batch)."""
+    return max(0, min(1 + i % 3, MAX_LEN - len(prompt) - max_new))
 
 
 @functools.lru_cache(maxsize=None)
@@ -163,6 +192,10 @@ def _check_obs(eng: Engine, obs: Observability) -> None:
     assert obs.interleaved.value == eng.n_interleaved_decode_steps
     if eng.prefix_sharing:
         assert obs.evictions.value == eng.prefix_index.n_evictions
+    assert obs.spec_bursts.value == eng.n_spec_bursts
+    assert obs.spec_draft_tokens.value == eng.n_spec_draft_tokens
+    assert obs.spec_accepted.value == eng.n_spec_accepted_tokens
+    assert obs.spec_tokens.value == eng.n_spec_tokens
     kept = sum(len(r.tokens) for r in eng.finished.values())
     assert obs.tokens.value == kept + obs.tokens_discarded.value, \
         (obs.tokens.value, kept, obs.tokens_discarded.value)
@@ -175,6 +208,9 @@ def _replay(mode: str, seed: int) -> None:
     kw = dict(MODES[mode])
     if kw.get("chunked_prefill"):
         kw["prefill_chunk_tokens"] = w["chunk_tokens"]
+    spec = kw.pop("spec", False)
+    if spec:
+        kw["drafts"] = {DRAFT_M: _draft(w["arch"])}
     obs = Observability()
     eng = Engine(cfg, params, max_len=MAX_LEN, n_slots=w["n_slots"],
                  eos_id=w["eos_id"], obs=obs, **kw)
@@ -190,7 +226,9 @@ def _replay(mode: str, seed: int) -> None:
     while pending or eng.has_work:
         while pending and pending[0][1][2] <= t:
             i, (prompt, max_new, _) = pending.pop(0)
-            rids[i] = eng.submit(prompt, max_new)
+            g = _spec_gamma(prompt, max_new, i) if spec else 0
+            rids[i] = eng.submit(prompt, max_new, spec_gamma=g,
+                                 draft_m=DRAFT_M if g else None)
         hand_emitted += eng.step()
         _check_invariants(eng)
         t += 1
@@ -229,6 +267,9 @@ def _replay_async(mode: str, seed: int) -> None:
     kw = dict(MODES[mode])
     if kw.get("chunked_prefill"):
         kw["prefill_chunk_tokens"] = w["chunk_tokens"]
+    spec = kw.pop("spec", False)
+    if spec:
+        kw["drafts"] = {DRAFT_M: _draft(w["arch"])}
     obs = Observability()
     eng = Engine(cfg, params, max_len=MAX_LEN, n_slots=w["n_slots"],
                  eos_id=w["eos_id"], obs=obs, **kw)
@@ -248,7 +289,9 @@ def _replay_async(mode: str, seed: int) -> None:
     def worker(i, prompt, max_new, delay):
         try:
             time.sleep(delay * 0.003)
-            s = aeng.submit_stream(prompt, max_new)
+            g = _spec_gamma(prompt, max_new, i) if spec else 0
+            s = aeng.submit_stream(prompt, max_new, spec_gamma=g,
+                                   draft_m=DRAFT_M if g else None)
             streams[i] = s
             it = iter(s)
             if cancel_after[i] is not None:
@@ -305,8 +348,8 @@ N_EXAMPLES = int(os.environ.get("NBL_FUZZ_EXAMPLES", "3"))
 @pytest.mark.parametrize("mode", list(MODES))
 @pytest.mark.parametrize("seed", range(N_EXAMPLES))
 def test_serving_oracle_fuzz(mode, seed):
-    """Deterministic fuzz sweep: NBL_FUZZ_EXAMPLES seeds x 5 engine modes
-    (CI runs 50 x 5 = 250 examples)."""
+    """Deterministic fuzz sweep: NBL_FUZZ_EXAMPLES seeds x 6 engine modes
+    (CI runs 50 x 6 = 300 examples)."""
     _replay(mode, seed)
 
 
