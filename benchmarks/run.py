@@ -31,6 +31,12 @@
                       in-flight decodes strictly below non-chunked, long-
                       prompt TTFT within 1.2x, exact token parity, decodes
                       provably emitting BETWEEN chunks
+  fused_throughput    fused one-dispatch step pipeline vs the legacy
+                      two-dispatch path (docs/architecture.md) at EQUAL
+                      HBM budget on the chunked-admission workload: p99
+                      inter-token latency during long-prompt admission
+                      strictly below legacy, one fused launch per step
+                      (dispatch counters), exact token parity
   async_throughput    AsyncEngine host loop under concurrent streamed
                       submission at a FIXED HBM budget: streamed tokens/s
                       and p50/p99 queue delay (submit->admission) vs
@@ -547,6 +553,119 @@ def bench_chunked(fast: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+def bench_fused(fast: bool) -> None:
+    """Fused one-dispatch step vs the legacy two-dispatch path at EQUAL
+    HBM budget (docs/architecture.md): both engines run chunked prefill
+    over the same workload — two short requests mid-decode when a long
+    prompt arrives — each paced by its own ONLY knob. Legacy runs
+    prefill_chunk_tokens-sized chunks, launching the chunk's prefill jit
+    AND the batched decode jit each interleaved step; the fused engine
+    runs under a decode-priority step_tokens budget (decoders charged
+    first, the remainder funding one page of chunk progress), folding
+    chunk + decodes into ONE mixed dispatch whose width the budget keeps
+    at a single page. Bounded per-step work + the dropped second launch
+    and readback is exactly what the budget buys: p99 inter-token latency
+    during the long prompt's admission window must be STRICTLY below the
+    two-dispatch path, with exact generate() parity, and the dispatch
+    counters prove the one-dispatch contract per step. The price is the
+    long prompt's TTFT (more, smaller chunks) — reported, not asserted:
+    the budget is the latency/TTFT dial."""
+    from repro.configs import get_config
+    from repro.launch.engine import Engine
+    from repro.launch.serve import generate
+    from repro.models import init_params
+    from repro.models.kv_cache import cache_bytes
+
+    cfg = get_config("tiny-dense")
+    max_len, page_size = 1024, 32
+    long_len, chunk = 768, 256
+    short_len, short_new, long_new = 16, 40, 8
+    budget = 3 * cache_bytes(cfg, 1, max_len)      # 3 full reservations
+    rng = np.random.default_rng(0)
+    shorts = [rng.integers(0, cfg.vocab_size, short_len).astype(np.int32)
+              for _ in range(2)]
+    longp = rng.integers(0, cfg.vocab_size, long_len).astype(np.int32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    refs = [np.asarray(generate(cfg, params, jnp.asarray(p)[None],
+                                max_new=n))[0]
+            for p, n in [(shorts[0], short_new), (shorts[1], short_new),
+                         (longp, long_new)]]
+
+    # the fused engine's pacing knob: every decoder funded first, the
+    # remainder grants the chunking row exactly one page per step
+    step_tokens = page_size + len(shorts)
+
+    def run_once(fused: bool):
+        eng = Engine(cfg, params, max_len=max_len, paged=True,
+                     page_size=page_size, expected_len=max_len,
+                     chunked_prefill=True, prefill_chunk_tokens=chunk,
+                     cache_budget_bytes=budget, fused_step=fused,
+                     step_tokens=step_tokens if fused else None)
+        assert eng.fused == fused
+        sids = [eng.submit(p, short_new) for p in shorts]
+        for _ in range(3):                         # shorts mid-decode
+            eng.step()
+        lid = eng.submit(longp, long_new)
+        gaps = []
+        long_first = None
+        while eng.has_work:
+            d0 = eng.n_fused_dispatches
+            t0 = clock()
+            eng.step()
+            dt = clock() - t0
+            # the one-dispatch contract, step by step (the PR 6 dispatch
+            # counter machinery): never a second fused launch
+            assert eng.n_fused_dispatches - d0 <= 1
+            req = eng.finished.get(lid) or next(
+                (r for r in eng.slot_req
+                 if r is not None and r.rid == lid), None)
+            if long_first is None:
+                gaps.append(dt)
+                if req is not None and req.t_first:
+                    long_first = req.t_first - req.t_submit
+        outs = {rid: np.asarray(eng.finished[rid].tokens, np.int32)
+                for rid in sids + [lid]}
+        for got, want in zip([outs[sids[0]], outs[sids[1]], outs[lid]],
+                             refs):                # exact parity, each mode
+            np.testing.assert_array_equal(got, want)
+        if fused:
+            assert eng.n_fused_dispatches > 0
+            assert eng.n_legacy_dispatches == 0
+        else:
+            assert eng.n_fused_dispatches == 0
+            assert eng.n_legacy_dispatches > 0
+        return eng, gaps, long_first
+
+    rows = {}
+    for mode, fused in (("legacy", False), ("fused", True)):
+        run_once(fused)                            # warmup: compile jits
+        p99s, ttfts = [], []
+        for _ in range(TIMED_REPEATS):             # per-claim minima, as
+            eng, gaps, ttft = run_once(fused)      # in bench_chunked
+            p99s.append(float(np.percentile(gaps, 99)))
+            ttfts.append(ttft)
+        p99, ttft = min(p99s), min(ttfts)
+        rows[mode] = (p99, ttft)
+        emit(f"fused/{mode}/p99_itl_ms", round(p99 * 1e3, 2),
+             "long_admission_window")
+        emit(f"fused/{mode}/long_ttft_ms", round(ttft * 1e3, 2))
+        emit(f"fused/{mode}/dispatches",
+             eng.n_fused_dispatches or eng.n_legacy_dispatches,
+             "deterministic")
+        if fused:
+            emit("fused/interleaved_steps", eng.n_interleaved_decode_steps,
+                 "deterministic")
+            emit("fused/step_tokens", step_tokens, "deterministic")
+            emit("fused/budget_utilization",
+                 round(eng.stats()["step_budget_utilization"], 3))
+    # the budget-bounded one-dispatch step strictly caps the legacy
+    # chunk-step decode stall
+    assert rows["fused"][0] < rows["legacy"][0], rows
+    emit("fused/p99_itl_ratio",
+         round(rows["legacy"][0] / rows["fused"][0], 2), "assert_gt_1")
+
+
+# ---------------------------------------------------------------------------
 def bench_async(fast: bool) -> None:
     """Async host loop under concurrent streamed traffic at a FIXED HBM
     budget vs NBL-m: client threads submit through AsyncEngine.submit_stream
@@ -889,6 +1008,7 @@ BENCHES = {
     "paged_throughput": bench_paged,
     "prefix_throughput": bench_prefix,
     "chunked_throughput": bench_chunked,
+    "fused_throughput": bench_fused,
     "async_throughput": bench_async,
     "speculative_throughput": bench_spec_throughput,
     "quant_compose": bench_quant_compose,

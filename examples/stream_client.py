@@ -8,9 +8,9 @@ mid-stream. Usable as a CLI demo against a running server::
     python examples/stream_client.py --port <port> --n 3 --cancel-first 2
 
 ``--watch`` instead polls the server's ``metrics`` op and renders a
-one-line live ticker (tok/s, queue depth, free pages, prefix hit-rate)
-from the observability registry — run it in a second terminal while
-traffic flows.
+one-line live ticker (tok/s, queue depth, free pages, prefix hit-rate,
+step-budget pressure + fused/legacy path tag) from the observability
+registry — run it in a second terminal while traffic flows.
 
 Also usable as a library (the CI async smoke imports ``Client`` from this
 file). No repro imports — the client needs only the stdlib, like a real
@@ -120,9 +120,12 @@ def watch(cli: "Client", interval: float, n_polls: Optional[int],
           out=sys.stdout) -> int:
     """Live metrics ticker: polls the ``metrics`` op every ``interval``
     seconds and renders one line per poll — streamed tok/s (token-counter
-    delta over the poll gap), queue depth, active slots, free pages and
-    the prefix hit-rate (hits / admissions). Runs ``n_polls`` times (None
-    = until interrupted); returns the number of polls rendered."""
+    delta over the poll gap), queue depth, active slots, free pages, the
+    prefix hit-rate (hits / admissions), and the fused step pipeline's
+    budget pressure (the ``nbl_step_budget_utilization`` gauge, with a
+    fused/legacy tag from the dispatch counters — docs/architecture.md).
+    Runs ``n_polls`` times (None = until interrupted); returns the number
+    of polls rendered."""
     prev_tok, prev_t, polls = None, None, 0
     while n_polls is None or polls < n_polls:
         m = cli.metrics()
@@ -138,11 +141,18 @@ def watch(cli: "Client", interval: float, n_polls: Optional[int],
         hits = c.get("nbl_prefix_hits_total", 0)
         admitted = c.get("nbl_requests_admitted_total", 0)
         hit_rate = f"{hits / admitted:.0%}" if admitted else "-"
+        # budget pressure: last step's planned tokens / step_tokens (0.0
+        # when unbudgeted or on the legacy two-dispatch path)
+        util = g.get("nbl_step_budget_utilization", 0.0)
+        path = ("fused" if c.get("nbl_fused_dispatches_total", 0)
+                else "legacy" if c.get("nbl_legacy_dispatches_total", 0)
+                else "-")
         print(f"[{snap['labels'].get('engine_mode', '?')}] "
               f"{rate:8.1f} tok/s | queue {g.get('nbl_queue_depth', 0):3d}"
               f" | active {g.get('nbl_slots_active', 0):3d}"
               f" | free pages {g.get('nbl_pages_free', 0):4d}"
-              f" | prefix hit {hit_rate}", file=out, flush=True)
+              f" | prefix hit {hit_rate}"
+              f" | budget {util:4.0%} ({path})", file=out, flush=True)
         prev_tok, prev_t = tok, now
         polls += 1
         if n_polls is None or polls < n_polls:

@@ -19,9 +19,14 @@
 #      chunk per step next to two active decodes — decode tokens emitted
 #      BETWEEN chunks, exact parity — then the serving-oracle fuzz suite
 #      at a bounded example count (50 seeds x 6 engine modes x {sync,
-#      async} = 600 randomized workloads vs generate(), the sixth mode
-#      being engine-native speculative decoding) and the
-#      chunked_throughput benchmark scenario under --fast
+#      async} x {fused, legacy} = 1200 randomized workloads vs
+#      generate(), the sixth mode being engine-native speculative
+#      decoding and every mode replayed through BOTH the fused
+#      one-dispatch step pipeline and the legacy two-dispatch oracle —
+#      docs/architecture.md), then the chunked_throughput and
+#      fused_throughput benchmark scenarios under --fast (the latter
+#      asserting p99 inter-token latency during long-prompt admission
+#      strictly below the legacy path at equal HBM budget)
 #   6. async serving smoke: the newline-JSON TCP server is started on a
 #      free port, 3 overlapping requests are streamed through the
 #      examples/stream_client.py Client, one is cancelled mid-stream —
@@ -199,12 +204,16 @@ print(f"chunked smoke OK: {s['n_chunks']} chunks, "
       f"exact parity")
 EOF
 
-echo "== serving-oracle fuzz suite (600 examples: 50 seeds x 6 modes x {sync,async}) =="
+echo "== serving-oracle fuzz suite (1200 examples: 50 seeds x 6 modes x {sync,async} x {fused,legacy}) =="
 NBL_FUZZ_EXAMPLES=50 python -m pytest -q tests/test_serving_fuzz.py
 
 echo "== chunked_throughput scenario (--fast) =="
 python -m benchmarks.run --fast --only chunked_throughput > /dev/null
 test -s benchmarks/out/chunked_throughput.json
+
+echo "== fused_throughput scenario (--fast, one-dispatch step vs legacy) =="
+python -m benchmarks.run --fast --only fused_throughput > /dev/null
+test -s benchmarks/out/fused_throughput.json
 
 echo "== async serving smoke (TCP server: stream 3, cancel 1 mid-stream) =="
 python - <<'EOF'

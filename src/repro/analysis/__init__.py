@@ -11,7 +11,8 @@ guarded-by       ``# guarded-by: <lock>`` attrs touched only under the lock
 lock-order       no Lock self-deadlock, no cross-lock acquisition cycles
 jit-discipline   function-scope ``jax.jit`` routes through ``shared_jit``
 jit-retrace      jit-in-loop / unhashable statics / unbucketed loop shapes
-host-sync        no device→host syncs reachable from ``Engine._step_impl``
+host-sync        no device→host syncs reachable from the step entries
+                 (both ``Engine._step_impl`` variants; ``--entry``)
 perf-counter     ``time.perf_counter`` confined to ``src/repro/obs/``
 obs-hygiene      every obs hook call behind an ``is not None`` guard
 ===============  ============================================================
@@ -22,7 +23,7 @@ when every finding is suppressed inline or baselined, 1 otherwise. See
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Set, Tuple
+from typing import Iterable, List, Optional, Sequence, Set, Tuple, Union
 
 from . import guarded_by, host_sync, jit_discipline, obs_hygiene
 from .core import (
@@ -55,7 +56,7 @@ __all__ = [
 def analyze_modules(
     modules: Sequence[SourceModule],
     rules: Optional[Set[str]] = None,
-    entry: str = host_sync.DEFAULT_ENTRY,
+    entry: Union[str, Iterable[str]] = host_sync.DEFAULT_ENTRIES,
 ) -> List[Finding]:
     """Run every pass over ``modules``; inline suppressions applied."""
     project = Project(modules)
@@ -78,16 +79,20 @@ def analyze_modules(
 
 
 def analyze_paths(
-    paths: Sequence[str], root: str, rules: Optional[Set[str]] = None
+    paths: Sequence[str],
+    root: str,
+    rules: Optional[Set[str]] = None,
+    entry: Union[str, Iterable[str]] = host_sync.DEFAULT_ENTRIES,
 ) -> List[Finding]:
-    return analyze_modules(collect_modules(paths, root), rules=rules)
+    return analyze_modules(collect_modules(paths, root), rules=rules,
+                           entry=entry)
 
 
 def analyze_source(
     text: str,
     rel: str = "fixture.py",
     rules: Optional[Set[str]] = None,
-    entry: str = host_sync.DEFAULT_ENTRY,
+    entry: Union[str, Iterable[str]] = host_sync.DEFAULT_ENTRIES,
 ) -> List[Finding]:
     """Analyze a source string — the test-fixture entry point."""
     return analyze_modules(

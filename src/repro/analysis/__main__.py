@@ -1,7 +1,8 @@
 """CLI for ``repro.analysis``.
 
     python -m repro.analysis [paths...] [--json FILE] [--baseline FILE]
-                             [--rule RULE]... [--write-baseline] [--no-baseline]
+                             [--rule RULE]... [--entry Class.method]...
+                             [--write-baseline] [--no-baseline]
 
 Paths default to ``src/repro``. Exit status: 0 when every finding is
 inline-suppressed or baselined, 1 otherwise, 2 on usage errors. The JSON
@@ -24,6 +25,7 @@ from . import (
     save_baseline,
 )
 from .core import git_sha
+from .host_sync import DEFAULT_ENTRIES
 
 DEFAULT_BASELINE = os.path.join("scripts", "analysis_baseline.json")
 
@@ -46,6 +48,11 @@ def main(argv=None) -> int:
                     help="write current findings to the baseline file and exit 0")
     ap.add_argument("--rule", action="append", default=None, choices=ALL_RULES,
                     help="restrict to RULE (repeatable)")
+    ap.add_argument("--entry", action="append", default=None,
+                    metavar="Class.method",
+                    help="host-sync root(s) to check reachability from "
+                         "(repeatable; default: Engine._step_impl and both "
+                         "its fused/legacy variants)")
     args = ap.parse_args(argv)
 
     root = os.getcwd()
@@ -56,7 +63,8 @@ def main(argv=None) -> int:
             return 2
 
     rules = set(args.rule) if args.rule else None
-    findings = analyze_paths(paths, root, rules=rules)
+    entry = tuple(args.entry) if args.entry else DEFAULT_ENTRIES
+    findings = analyze_paths(paths, root, rules=rules, entry=entry)
 
     baseline_path = args.baseline or DEFAULT_BASELINE
     if args.write_baseline:

@@ -1,9 +1,11 @@
 """Pass 3: hot-path host syncs and the perf-counter confinement rule.
 
-``host-sync`` — build the call graph reachable from ``Engine._step_impl``
-(through ``self.m()``, typed-attribute calls like ``self.allocator.free()``,
-and imported module-level functions) and flag device→host synchronization
-points inside it: ``.item()``, ``.block_until_ready()``, ``jax.device_get``
+``host-sync`` — build the call graph reachable from the engine step
+entries (default: ``Engine._step_impl`` plus both its variants,
+``_step_fused`` and ``_step_legacy`` — override with ``--entry``, given
+through ``self.m()``, typed-attribute calls like
+``self.allocator.free()``, and imported module-level functions) and flag
+device→host synchronization points inside it: ``.item()``, ``.block_until_ready()``, ``jax.device_get``
 / ``jax.block_until_ready``, ``np.asarray`` / ``np.array`` (numpy forces a
 device fetch on a jax array), and ``float(...)`` on a non-literal. The
 engine's deliberate once-per-step logits readbacks are marked in source
@@ -19,22 +21,37 @@ tree.
 from __future__ import annotations
 
 import ast
-from typing import List, Optional, Set, Tuple
+from typing import Iterable, List, Optional, Set, Tuple, Union
 
 from .core import Finding, Project, SourceModule
 
-DEFAULT_ENTRY = "Engine._step_impl"
+# Both _step_impl variants are checked roots: the fused pipeline's
+# readback lives in _commit_fused, the legacy one in _step_legacy —
+# listing the variants explicitly keeps the sanctioning independent of
+# whether the dispatcher's self-calls resolve.
+DEFAULT_ENTRIES = ("Engine._step_impl", "Engine._step_fused",
+                   "Engine._step_legacy")
+DEFAULT_ENTRY = DEFAULT_ENTRIES          # back-compat alias
 
 _SYNC_METHODS = {"item", "block_until_ready"}
 _NUMPY_SYNC_FUNCS = {"asarray", "array", "ascontiguousarray"}
 _JAX_SYNC_FUNCS = {"device_get", "block_until_ready"}
 
 
-def run(project: Project, entry: str = DEFAULT_ENTRY) -> List[Finding]:
+def run(
+    project: Project,
+    entry: Union[str, Iterable[str]] = DEFAULT_ENTRIES,
+) -> List[Finding]:
+    entries = (entry,) if isinstance(entry, str) else tuple(entry)
     out: List[Finding] = []
-    reachable = _reachable_from(project, entry)
-    for (mod, cls_name, func), qual in reachable:
-        out.extend(_scan_function(project, mod, func, qual))
+    seen: Set[Tuple[str, str]] = set()
+    for e in entries:
+        for (mod, cls_name, func), qual in _reachable_from(project, e):
+            key = (mod.rel, qual)
+            if key in seen:
+                continue
+            seen.add(key)
+            out.extend(_scan_function(project, mod, func, qual))
     out.extend(_perf_counter_scan(project))
     return out
 

@@ -256,6 +256,10 @@ SHAPES: dict[str, ShapeConfig] = {
     # per-slot cache-extend (launch/engine._run_spec_verify)
     "spec_verify_4k": ShapeConfig("spec_verify_4k", "spec_verify",
                                   4_096, 1),
+    # fused engine step: the plan->execute->commit pipeline's ONE mixed
+    # dispatch — 128 serving slots at row width 4k (decode rows valid at
+    # width 1, chunk rows up to the full width; launch/engine._step_fused)
+    "fused_step_4k": ShapeConfig("fused_step_4k", "fused_step", 4_096, 128),
     "long_500k":   ShapeConfig("long_500k",   "decode",  524_288, 1),
 }
 
@@ -266,7 +270,8 @@ def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
     if shape.name == "long_500k" and not cfg.sub_quadratic:
         return False, ("full-attention arch: 524k dense KV cache/attention is "
                        "the quadratic regime this shape excludes (DESIGN.md)")
-    if shape.kind in ("prefill_shared", "prefill_chunked", "spec_verify"):
+    if shape.kind in ("prefill_shared", "prefill_chunked", "spec_verify",
+                      "fused_step"):
         if any(b.kind == "mamba" for b in cfg.blocks()):
             return False, ("SSM stack: partial prefill cannot resume scanned "
                            "state mid-sequence (models/transformer.prefill)")

@@ -177,6 +177,92 @@ def paged_decode_xla(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     return out.astype(q.dtype)
 
 
+def paged_mixed_xla(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    page_tbl: jax.Array, row_pos: jax.Array,
+                    row_len: jax.Array, *,
+                    scale: Optional[float] = None,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None) -> jax.Array:
+    """Mixed-row (multi-query) paged attention, pure XLA: each slot
+    carries up to W new tokens at absolute positions ``row_pos[b] + i``
+    (valid while ``i < row_len[b]``; ``row_len 0`` = inactive row) and
+    token i attends logical positions ``[0, row_pos[b] + i]`` of its
+    slot's sequence — write-before-attend puts the in-chunk keys in the
+    pages, so the per-query causal mask alone gives exact chunk
+    semantics. ONE page gather per SLOT feeds a dense masked softmax
+    (the W queries share the gathered keys as a GEMM), which is what
+    makes a wide chunk row cost prefill-like compute instead of W
+    separate decode gathers.
+
+    q: (B, KV, rep, W, hd); k_pages/v_pages: (n_pages, KV, page_size,
+    hd); page_tbl: (B, n_lpages) int32, -1 = unallocated; row_pos /
+    row_len: (B,) int32. Returns (B, KV, rep, W, hd); invalid query
+    positions come back all-zero (denominator-guarded, finite)."""
+    b, kvh, rep, w, hd = q.shape
+    n_pages, _, page_size, _ = k_pages.shape
+    n_lpages = page_tbl.shape[1]
+    scale = hd ** -0.5 if scale is None else scale
+
+    idx = jnp.clip(page_tbl, 0)                       # (B, P); mask kills -1
+    t_total = n_lpages * page_size
+    kg = k_pages[idx].transpose(0, 2, 1, 3, 4).reshape(b, kvh, t_total, hd)
+    vg = v_pages[idx].transpose(0, 2, 1, 3, 4).reshape(b, kvh, t_total, hd)
+
+    s = jnp.einsum("bgrwd,bgtd->bgrwt", q.astype(jnp.float32),
+                   kg.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    t = jnp.arange(t_total, dtype=jnp.int32)[None, None]        # (1, 1, T)
+    qpos = (row_pos.astype(jnp.int32)[:, None]
+            + jnp.arange(w, dtype=jnp.int32)[None, :])          # (B, W)
+    qvalid = jnp.arange(w, dtype=jnp.int32)[None, :] \
+        < row_len.astype(jnp.int32)[:, None]                    # (B, W)
+    valid = (t <= qpos[:, :, None]) \
+        & jnp.repeat(page_tbl >= 0, page_size, axis=1)[:, None, :]
+    if window is not None:
+        valid &= (qpos[:, :, None] - t) < window
+    valid &= qvalid[:, :, None]
+    s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
+
+    m = s.max(axis=-1, keepdims=True)
+    pr = jnp.exp(s - m)
+    denom = jnp.maximum(pr.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bgrwt,bgtd->bgrwd", (pr / denom),
+                     vg.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def paged_mixed(q, k_pages, v_pages, page_tbl, row_pos, row_len, *,
+                scale: Optional[float] = None, window: Optional[int] = None,
+                softcap: Optional[float] = None,
+                use_kernel: Optional[bool] = None) -> jax.Array:
+    """Backend dispatcher for the mixed-row step attention: on TPU the
+    W queries run as B*W virtual single-token rows through the Mosaic
+    ``paged_attention`` kernel (the page sweep's BlockSpec gather keeps
+    that cheap on-device); elsewhere the dense-gather XLA path, whose
+    shared per-slot gather is the fast shape for the serving loop."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        return paged_mixed_xla(q, k_pages, v_pages, page_tbl, row_pos,
+                               row_len, scale=scale, window=window,
+                               softcap=softcap)
+    b, kvh, rep, w, hd = q.shape
+    qv = q.transpose(0, 3, 1, 2, 4).reshape(b * w, kvh, rep, hd)
+    tpos = (row_pos.astype(jnp.int32)[:, None]
+            + jnp.arange(w, dtype=jnp.int32)[None, :])
+    valid = jnp.arange(w, dtype=jnp.int32)[None, :] \
+        < row_len.astype(jnp.int32)[:, None]
+    lens = jnp.where(valid, tpos + 1, 0).reshape(-1)
+    out = paged_attention(qv, k_pages, v_pages,
+                          jnp.repeat(page_tbl, w, axis=0), lens,
+                          scale=scale, window=window, softcap=softcap)
+    return out.reshape(b, w, kvh, rep, hd).transpose(0, 2, 3, 1, 4)
+
+
 def paged_decode(q, k_pages, v_pages, page_tbl, lengths, *,
                  scale: Optional[float] = None, window: Optional[int] = None,
                  softcap: Optional[float] = None,

@@ -39,7 +39,7 @@ from repro.distributed.sharding import (  # noqa: E402
 )
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch.specs import input_specs, param_shapes  # noqa: E402
-from repro.models import decode_step, loss_fn, prefill  # noqa: E402
+from repro.models import decode_step, fused_step, loss_fn, prefill  # noqa: E402
 from repro.optim import adamw_init, adamw_update, get_schedule  # noqa: E402
 from repro.roofline.analysis import summarize  # noqa: E402
 
@@ -101,6 +101,22 @@ def build_target(cfg, shape):
         ntok = shape.global_batch * shape.seq_len
         return shared_prefill_step, args, shardings, ntok, False
 
+    if shape.kind == "fused_step":
+        # the fused engine dispatch: mixed decode + chunk rows through one
+        # jit (engine _execute_fused) — row_len masks each row's valid span
+        def fused(params, tokens, cache, row_pos, row_len, tbl):
+            return fused_step(cfg, params, tokens, cache, row_pos,
+                              row_len, tbl)
+        args = (pshapes, ins["tokens"], ins["cache"], ins["row_pos"],
+                ins["row_len"], ins["page_tbl"])
+        shardings = (pspecs, shaped_spec(ins["tokens"].shape, "dp", None),
+                     cache_specs(ins["cache"]),
+                     shaped_spec(ins["row_pos"].shape, "dp"),
+                     shaped_spec(ins["row_len"].shape, "dp"),
+                     shaped_spec(ins["page_tbl"].shape, "dp", None))
+        ntok = shape.global_batch * shape.seq_len
+        return fused, args, shardings, ntok, False
+
     # decode/serve: one new token per sequence against a seq_len KV cache.
     # "serve" is the engine's batched slot-decode: pos is a per-slot (B,)
     # vector sharded with the slot dim; "decode" keeps the scalar pos;
@@ -145,7 +161,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, nbl_m: int = 0,
             donate_args = ()
             if donate and shape.kind == "train":
                 donate_args = (0, 1)
-            elif donate and shape.kind in ("decode", "serve", "serve_paged"):
+            elif donate and shape.kind in ("decode", "serve", "serve_paged",
+                                           "fused_step"):
                 donate_args = (2,)
             lowered = jax.jit(fn, in_shardings=jit_shardings(shardings),  # nbl: disable=jit-discipline -- AOT lower/compile cell: the jit exists to be lowered once and measured, never reused
                               donate_argnums=donate_args).lower(*args)

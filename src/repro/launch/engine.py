@@ -101,6 +101,27 @@ Architecture (frontend → scheduler → engine → cache):
       requests release their slot (and pages, copy-free: isolation under
       reuse is positional, see models/paging.py).
 
+      FUSED STEP PIPELINE (``fused_step=True``, the default on paged
+      SSM-free, cross-attn-free engines; docs/architecture.md): the step
+      is restructured PLAN -> EXECUTE -> COMMIT. A host-side
+      :class:`~repro.launch.stepplan.StepPlan` selects the step's work
+      under one decode-priority TOKEN budget (``step_tokens``): every
+      decoding slot is charged 1 token first, the remainder grants
+      page-aligned chunk spans to mid-prompt slots (oldest admission
+      first — possibly SEVERAL per step, unlike the legacy one-chunk
+      rule), and the leftover paces admission
+      (``Scheduler.admit(budget=...)``). Execution then launches ONE
+      ``transformer.fused_step`` jit over a mixed (n_slots, W) batch —
+      decode rows at width 1, chunk rows at their span width, W bucketed
+      to a power of two, all sharing the live page table; per-row
+      ``row_len`` masks inactive rows (0) and extracts each row's
+      last-valid-token logits. Commit performs the step's single logits
+      readback, emits decode tokens and final-chunk seed tokens,
+      advances chunk progress (publishing prefix pages progressively)
+      and retires. ``fused_step=False`` keeps the legacy two-dispatch
+      path (chunk prefill + batched decode) as the parity oracle; the
+      fuzz harness replays every mode through both, token-exactly.
+
       Slot state machine (per request)::
 
           admitted ──(chunked)──> chunking(pos) ──last chunk──> decoding
@@ -129,6 +150,16 @@ Architecture (frontend → scheduler → engine → cache):
                                                          KV cannot be
                                                          drafted) —
                                unsharded engines only; greedy (temp 0)
+          fused step           yes    yes    no (scan    no (the fused
+          (fused_step=True,                  state needs batch carries
+          the default; paged                 the scanned no enc rows)
+          engines only)                      decode jit)
+                               gates are SILENT fallbacks, not errors:
+                               ring engines and SSM / cross-attn stacks
+                               keep the legacy two-dispatch step path;
+                               Engine(fused_step=False) forces ANY
+                               engine onto it (the parity oracle the
+                               fuzz harness replays against)
           async / server       yes    yes    yes*        yes*
                                (*inherits the WRAPPED layout's gates
                                 verbatim: AsyncEngine/launch.server drive
@@ -202,7 +233,10 @@ from repro.jitcache import SHARED_JITS as _SHARED_JITS, shared_jit as _shared_ji
 from repro.launch.scheduler import (
     Request, Scheduler, latency_stats, nbl_page_budget, nbl_slot_budget,
 )
-from repro.models import decode_step, prefill
+from repro.launch.stepplan import (
+    ChunkRow, StepPlan, chunk_span, decode_first_budget,
+)
+from repro.models import decode_step, fused_step, prefill
 from repro.models.kv_cache import assign_slot, init_slot_cache
 from repro.launch.speculative import (
     accept_greedy, build_draft_cache_view, draft_burst, validate_draft,
@@ -254,6 +288,17 @@ class Engine:
     batched decode — see the module docstring for the slot state machine
     and the mode-compatibility table.
 
+    ``fused_step=True`` (the default) routes paged SSM-free cross-attn-
+    free engines through the plan -> execute -> commit pipeline: ONE
+    fused jit per step executes the mixed decode + chunk-row batch
+    (docs/architecture.md); other layouts silently keep the legacy
+    two-dispatch path, and ``fused_step=False`` forces it everywhere
+    (the fuzz harness's parity oracle). ``step_tokens`` (fused path
+    only; default None = unbounded) is the per-step decode-priority
+    token budget: decode rows are charged first, the remainder grants
+    chunk spans and paces admission — it replaces the scheduler's
+    ``max_prefill_tokens_per_step`` as the single pacing knob.
+
     Sharding is captured at CONSTRUCTION time: build the engine inside
     ``use_mesh(mesh)`` to get sharded params/caches — an engine built
     un-meshed stays fully replicated even if later driven under a mesh.
@@ -285,6 +330,8 @@ class Engine:
                  shared_prefix_len: int = 0,
                  chunked_prefill: bool = False,
                  prefill_chunk_tokens: Optional[int] = None,
+                 fused_step: bool = True,
+                 step_tokens: Optional[int] = None,
                  obs: Optional["Observability"] = None,
                  stats_window: Optional[int] = 1024,
                  drafts: Optional[dict] = None):
@@ -378,10 +425,21 @@ class Engine:
         has_mamba = any(b.kind == "mamba" for b in blocks)
         has_window = any(b.kind == "attn" and b.window is not None
                          for b in blocks)
+        has_cross = any(b.kind == "cross_attn" for b in blocks)
         # exactness gates (see module docstring): SSM state is corrupted by
         # padded tokens; ring compaction evicts in-window slots on padding.
         self.bucket_prompts = (bool(bucket_prompts) and not has_mamba
                                and (self.paged or not has_window))
+        # fused plan->execute->commit pipeline: a SILENT fast-path gate,
+        # not an error — ring engines, SSM stacks (the fused batch cannot
+        # resume scanned state mid-sequence) and cross-attn stacks (no enc
+        # rows in the fused batch) keep the legacy two-dispatch step path.
+        self.fused = bool(fused_step) and self.paged \
+            and not has_mamba and not has_cross
+        if step_tokens is not None and int(step_tokens) < 1:
+            raise ValueError(f"step_tokens must be >= 1, got {step_tokens}")
+        self.step_tokens = int(step_tokens) if step_tokens is not None \
+            else None
 
         if self.paged:
             # pure sliding-window stacks can retire pages that fall out of
@@ -454,6 +512,15 @@ class Engine:
         self.n_spec_draft_tokens = 0   # gamma per burst (always full)
         self.n_spec_accepted_tokens = 0  # draft-origin tokens EMITTED
         self.n_spec_tokens = 0         # all spec-path tokens emitted
+        # step-path dispatch split (the PR 6 "dispatch-count machinery"
+        # consumer): fused counts ONE per fused-step jit launch; legacy
+        # counts the dispatches the fused jit replaces — the batched
+        # decode plus each chunk-prefill jit. Admission prefills and spec
+        # draft/verify launches are identical on both paths and excluded.
+        self.n_fused_dispatches = 0
+        self.n_legacy_dispatches = 0
+        self._budget_util_sum = 0.0    # per planned step, for stats()
+        self._n_planned_steps = 0      # fused steps that planned any work
         self._pool_in_use_sum = 0      # allocator occupancy, per decode step
         self.n_finished = 0   # lifetime served count # guarded-by: _finished_lock
         # guards the finished dict + the stats window deque: _emit/_reject/
@@ -506,6 +573,7 @@ class Engine:
             self._assign_jit = _shared_jit(
                 ("assign_slot", donate), lambda: jax.jit(_assign, **akw))
         self._akw, self._cspecs = akw, cspecs
+        self._donate = bool(donate)
         # under a mesh the batch=1 prefill cache must come out in the same
         # production layout the slot cache uses, so assignment never
         # reshards on admission.
@@ -520,6 +588,7 @@ class Engine:
         self._prefill_jits: dict = {}   # (bucket, with_enc) -> jit fn
         self._assign_paged_jits: dict = {}   # prefill cache_len -> jit fn
         self._spec_draft_jits: dict = {}     # (draft_m, gamma) -> burst jit
+        self._fused_jits: dict = {}          # row width W -> fused-step jit
 
     # ------------------------------------------------------------- admin --
 
@@ -712,6 +781,39 @@ class Engine:
                 fn = _shared_jit(("assign_paged", cfg, ps, bool(kw)),
                                  lambda: jax.jit(_assign, **kw))
             self._assign_paged_jits[cache_len] = fn
+        return fn
+
+    def _fused_fn(self, width: int):
+        """Fused-step jit for row width ``width`` (a power of two — the
+        StepPlan buckets spans, so the cache stays O(log chunk_tokens)):
+        ONE dispatch executes the whole (n_slots, W) mixed batch of
+        decode rows (len 1), chunk rows (their span) and inactive rows
+        (len 0) against the live page table. Donated like the decode jit:
+        the old cache buffers are dead once the step's pages are
+        written."""
+        fn = self._fused_jits.get(width)
+        if fn is None:
+            cfg = self.cfg
+
+            def _fused(p, tokens, cache, row_pos, row_len, tbl):
+                return fused_step(cfg, p, tokens, cache, row_pos, row_len,
+                                  tbl)
+
+            dkw = dict(donate_argnums=(2,)) if self._donate else {}
+            if self._sharded:
+                tok_spec = shaped_spec((self.n_slots, width), "dp", None)
+                vec_spec = shaped_spec((self.n_slots,), "dp")
+                din = (self._pspecs, tok_spec, self._cspecs, vec_spec,
+                       vec_spec,
+                       shaped_spec((self.n_slots, self._pps), "dp", None))
+                fn = jax.jit(  # nbl: disable=jit-discipline -- sharded, per-instance by design
+                    _fused, in_shardings=jit_shardings(din),
+                    out_shardings=jit_shardings((None, self._cspecs)),
+                    **dkw)
+            else:
+                fn = _shared_jit(("fused_step", cfg, width, self._donate),
+                                 lambda: jax.jit(_fused, **dkw))
+            self._fused_jits[width] = fn
         return fn
 
     def _sample(self, logits_row: np.ndarray) -> int:
@@ -1253,9 +1355,10 @@ class Engine:
         return self.allocator.free_pages >= need or self._reclaim_pages(need)
 
     def _chunk_step(self) -> int:
-        """Prefill ONE page-aligned chunk of the oldest chunking slot's
-        prompt (FIFO over admission time), allocating only that chunk's
-        pages. Non-final chunks leave the slot SUSPENDED until the next
+        """LEGACY path only (the fused pipeline plans chunk rows into its
+        one dispatch instead — _plan_chunks): prefill ONE page-aligned
+        chunk of the oldest chunking slot's prompt (FIFO over admission
+        time), allocating only that chunk's pages. Non-final chunks leave the slot SUSPENDED until the next
         step — its pages are retained, its table row's tail stays
         unallocated so the batched decode masks it. The final chunk's
         logits seed decoding: the slot flips chunking -> decoding, its
@@ -1300,6 +1403,7 @@ class Engine:
         # the request's OWN earlier chunks are the "shared prefix"
         logits = self._run_partial_prefill(slot, req, filled, end)
         self.n_chunks += 1
+        self.n_legacy_dispatches += 1      # the chunk's own prefill jit
         final = end >= plen
         if self.obs is not None:
             self.obs.on_chunk(req, t0, time.monotonic(), filled, end, final)
@@ -1328,20 +1432,46 @@ class Engine:
             return self._step_impl(None)
         t0 = time.monotonic()
         st = {"dispatch_s": 0.0, "n_decoding": 0, "n_chunking": 0,
-              "chunk_tokens": 0, "prefill_tokens0": self.n_prefill_tokens}
+              "chunk_tokens": 0, "prefill_tokens0": self.n_prefill_tokens,
+              "tokens_planned": 0, "budget_utilization": 0.0}
         emitted = self._step_impl(st)
         self.obs.on_step(
             self, t0=t0, t1=time.monotonic(), dispatch_s=st["dispatch_s"],
             n_decoding=st["n_decoding"], n_chunking=st["n_chunking"],
             tokens_emitted=emitted,
             prefill_tokens=self.n_prefill_tokens - st["prefill_tokens0"],
-            chunk_tokens=st["chunk_tokens"])
+            chunk_tokens=st["chunk_tokens"],
+            tokens_planned=st["tokens_planned"],
+            budget_utilization=st["budget_utilization"])
         return emitted
 
     def _step_impl(self, st: Optional[dict]) -> int:
+        """One step, as plan -> execute -> commit: admission planning is
+        shared; the fused path then plans chunk rows under the token
+        budget and launches ONE fused dispatch, while the legacy path
+        keeps the historical two-dispatch sequence (at most one chunk
+        prefill jit, then the batched decode jit) as the parity
+        oracle."""
+        emitted = self._plan_admission()
+        if self.fused:
+            return emitted + self._step_fused(st)
+        return emitted + self._step_legacy(st)
+
+    def _plan_admission(self) -> int:
+        """PLAN, phase 1 — admission: pop queued requests into free slots
+        (FIFO, page-gated). On the fused path the scheduler's pull is
+        paced by what the step's token budget leaves after charging every
+        decoding slot 1 token — decode priority extends to admission —
+        while the queue HEAD is always admitted (Scheduler.admit), so an
+        over-budget prompt cannot livelock."""
         free = [i for i, r in enumerate(self.slot_req) if r is None]
         emitted = 0
-        pending = self.scheduler.admit(len(free))
+        budget = None
+        if self.fused and self.step_tokens is not None:
+            n_dec = sum(1 for s in self.active_slots
+                        if self.slot_chunk_pos[s] < 0)
+            budget = decode_first_budget(self.step_tokens, n_dec)
+        pending = self.scheduler.admit(len(free), budget=budget)
         while pending:
             req = pending.pop(0)
             if len(req.prompt) + req.max_new > self.max_len:
@@ -1369,7 +1499,223 @@ class Engine:
             self._admit(req, free.pop(), n_shared, shared_ids)
             if not self.chunked:
                 emitted += 1                   # prefill emits a first token
+        return emitted
 
+    def _spec_rounds(self, active: list[int]) -> tuple[int, list[int]]:
+        """Shared by both paths: one draft+verify round per live spec slot
+        (they decode on their OWN jits, then sit out the step's batched /
+        fused dispatch as masked rows). Returns (#tokens emitted, the
+        slots still eligible for this step's dispatch) — a spec round can
+        retire or preempt slots mid-list, so the survivors are
+        re-filtered."""
+        if not self.drafts:
+            return 0, active
+        emitted = 0
+        spec = [s for s in active if self.slot_req[s].spec_gamma > 0]
+        for slot in spec:
+            emitted += self._spec_slot_step(slot)
+        sset = set(spec)
+        return emitted, [s for s in active
+                         if s not in sset and self.slot_req[s] is not None]
+
+    # ------------------------------------------------ fused step pipeline --
+
+    def _plan_chunks(self, plan: StepPlan) -> dict[int, Request]:
+        """PLAN, phase 2 (fused path) — chunk-row selection: grant
+        page-aligned prompt spans to mid-chunking slots, OLDEST admission
+        first, under what the token budget leaves after every decoding
+        slot's 1-token charge (stepplan.decode_first_budget — decode rows
+        are never displaced). Unlike the legacy one-chunk-per-step rule,
+        several rows may be granted when the budget allows. Each granted
+        row's pages are allocated here with the legacy discipline —
+        reclaim LRU prefix entries, then preempt strictly-younger slots,
+        else stop granting (the oldest suspended row must not be jumped
+        by younger ones). Returns {slot: request} at grant time so commit
+        can drop rows whose slot was preempted before execution."""
+        row_req: dict[int, Request] = {}
+        if not self.chunked:
+            return row_req
+        n_dec = sum(1 for s in self.active_slots
+                    if self.slot_chunk_pos[s] < 0)
+        remaining = decode_first_budget(self.step_tokens, n_dec)
+        chunking = sorted(
+            (s for s in self.active_slots if self.slot_chunk_pos[s] >= 0),
+            key=lambda s: self.slot_req[s].admit_seq)
+        ps = self.page_size
+        for slot in chunking:
+            req = self.slot_req[slot]
+            if req is None or self.slot_chunk_pos[slot] < 0:
+                continue   # preempted while an older row evicted youngers
+            filled = int(self.slot_chunk_pos[slot])
+            plen = len(req.prompt)
+            end = chunk_span(filled, plen, self.chunk_tokens, remaining, ps)
+            if end <= filled:
+                break      # budget exhausted — younger rows wait too
+            start_pg, end_pg = span_pages(filled, end, ps)
+            need = end_pg - start_pg
+            granted = True
+            while True:
+                ids = self.allocator.alloc(need)
+                if ids is not None:
+                    break
+                if self._reclaim_pages(need):
+                    continue
+                younger = [s for s in self.active_slots
+                           if self.slot_req[s].admit_seq > req.admit_seq]
+                if not younger:
+                    if self.obs is not None:
+                        self.obs.on_suspend(req, time.monotonic())
+                    granted = False
+                    break
+                self._preempt(max(younger,
+                                  key=lambda s:
+                                  self.slot_req[s].admit_seq))
+            if not granted:
+                break      # pool dry for the oldest row: stop granting
+            self.page_tbl[slot, start_pg:end_pg] = ids
+            self.slot_pages[slot].extend(ids)
+            plan.chunk_rows.append(ChunkRow(slot, filled, end,
+                                            final=end >= plen))
+            row_req[slot] = req
+            if remaining is not None:
+                remaining -= end - filled
+        return row_req
+
+    def _step_fused(self, st: Optional[dict]) -> int:
+        """Fused path: plan chunk rows, fault decode pages, run spec
+        rounds, then EXECUTE one fused dispatch and COMMIT."""
+        emitted = 0
+        plan = StepPlan(budget=self.step_tokens)
+        row_req = self._plan_chunks(plan)
+        self._ensure_decode_pages()          # fused implies paged
+        active = self.active_slots
+        if self.chunked:
+            active = [s for s in active if self.slot_chunk_pos[s] < 0]
+        se, active = self._spec_rounds(active)
+        emitted += se
+        # paging faults / spec rounds above may have preempted slots the
+        # plan selected: keep decode rows from the survivors and chunk
+        # rows whose slot still holds the request they were granted for
+        # (an evicted row's pages were released with its slot).
+        plan.decode_slots = active
+        plan.chunk_rows = [c for c in plan.chunk_rows
+                           if self.slot_req[c.slot] is row_req[c.slot]]
+        if st is not None:
+            # "still mid-chunking after this step's chunk progress": rows
+            # whose final chunk rides this step flip to decoding at commit
+            st["n_chunking"] = (
+                int(np.sum(self.slot_chunk_pos >= 0))
+                - sum(1 for c in plan.chunk_rows if c.final))
+            st["n_decoding"] = len(plan.decode_slots)
+        if not plan.has_work():
+            return emitted
+        self._budget_util_sum += plan.utilization
+        self._n_planned_steps += 1
+        if st is not None:
+            st["tokens_planned"] = plan.tokens_planned
+            st["budget_utilization"] = plan.utilization
+        logits, td0 = self._execute_fused(plan)
+        return emitted + self._commit_fused(plan, logits, td0, st)
+
+    def _execute_fused(self, plan: StepPlan):
+        """EXECUTE: build the (n_slots, W) mixed batch and launch the
+        step's ONE device dispatch. Decode rows carry their last token at
+        width 1; chunk rows carry their page-aligned prompt span;
+        everything else (free slots, spec slots, suspended chunkers)
+        rides with row_len 0 — the fused attention's explicit write mask
+        drops their KV writes and a 0 length attends nothing, so the LIVE
+        page table is shared with the dispatch as-is (no defensive
+        copy)."""
+        w = plan.width
+        tokens = np.zeros((self.n_slots, w), np.int32)
+        row_pos = np.zeros(self.n_slots, np.int32)
+        row_len = np.zeros(self.n_slots, np.int32)
+        for s in plan.decode_slots:
+            tokens[s, 0] = self.slot_tok[s]
+            row_pos[s] = self.slot_pos[s]
+            row_len[s] = 1
+        for c in plan.chunk_rows:
+            tokens[c.slot, :c.length] = \
+                self.slot_req[c.slot].prompt[c.start:c.end]
+            row_pos[c.slot] = c.start
+            row_len[c.slot] = c.length
+        td0 = time.monotonic()
+        with (self.obs.annotate("nbl.fused_step")
+              if self.obs is not None else _NULLCTX):
+            logits, self.cache = self._fused_fn(w)(
+                self.params, jnp.asarray(tokens), self.cache,
+                jnp.asarray(row_pos), jnp.asarray(row_len),
+                jnp.asarray(self.page_tbl))
+        self.n_fused_dispatches += 1
+        if plan.decode_slots:
+            self.n_decode_steps += 1
+            self._pool_in_use_sum += self.allocator.in_use
+        return logits, td0
+
+    def _commit_fused(self, plan: StepPlan, logits, td0: float,
+                      st: Optional[dict]) -> int:
+        """COMMIT: the step's single logits readback, then every host
+        transition — chunk progress (+ progressive prefix publication),
+        final-chunk seed emission, decode emission, retirement — all
+        through the same _emit the legacy path uses."""
+        # host-sync: readback -- THE per-step readback: every row's last-
+        # valid-token logits row comes host-side once; decode sampling
+        # AND final-chunk seed tokens are both served from this one fetch
+        rows = np.asarray(logits[:, -1], np.float32)
+        if st is not None:
+            # dispatch + the logits device->host readback the sample needs
+            st["dispatch_s"] = time.monotonic() - td0
+        emitted = 0
+        now = time.monotonic()
+        ps = self.page_size
+        ctoks = 0
+        for c in plan.chunk_rows:
+            req = self.slot_req[c.slot]
+            self.n_chunks += 1
+            # same per-chunk accounting as the legacy _run_partial_prefill
+            # path, so counters stay path-independent per chunk
+            self.n_prefills += 1
+            self.n_prefill_tokens += c.length
+            ctoks += c.length
+            if self.obs is not None:
+                self.obs.on_prefill(c.length)
+                self.obs.on_chunk(req, td0, now, c.start, c.end, c.final)
+            if self.prefix_sharing and c.end // ps:
+                # publish full pages PROGRESSIVELY (see
+                # _run_partial_prefill): later admissions can share a long
+                # prompt's head while its tail still chunks
+                self.prefix_index.insert(
+                    req.prompt[:c.end],
+                    self.page_tbl[c.slot, :c.end // ps], self.allocator)
+            if c.final:
+                # chunking -> decoding: the row's last-token logits seed
+                # the request's first generated token
+                self.slot_chunk_pos[c.slot] = -1
+                self.slot_pos[c.slot] = len(req.prompt)
+                self._emit(req, c.slot, self._sample(rows[c.slot]), now)
+                emitted += 1
+            else:
+                self.slot_chunk_pos[c.slot] = c.end
+        if st is not None:
+            st["chunk_tokens"] = ctoks
+        if plan.decode_slots and np.any(self.slot_chunk_pos >= 0):
+            self.n_interleaved_decode_steps += 1   # decode BETWEEN chunks
+        for slot in plan.decode_slots:
+            req = self.slot_req[slot]
+            assert req is not None             # snapshot taken post-preempt
+            self.slot_pos[slot] += 1
+            self._emit(req, slot, self._sample(rows[slot]), now)
+            emitted += 1
+        return emitted
+
+    # ----------------------------------------------------- legacy stepping --
+
+    def _step_legacy(self, st: Optional[dict]) -> int:
+        """Legacy two-dispatch path (``fused_step=False``, ring engines,
+        SSM / cross-attn stacks): at most ONE prefill chunk on its own
+        jit, then the batched decode jit — the fused pipeline's parity
+        oracle, kept token-exact with the pre-fused engine."""
+        emitted = 0
         if self.chunked:
             if st is not None:
                 ct0 = self.n_prefill_tokens
@@ -1384,28 +1730,25 @@ class Engine:
             if st is not None:
                 st["n_chunking"] = len(active) - len(decoding)
             active = decoding
-        if self.drafts:
-            # spec slots decode on their OWN draft+verify path — one round
-            # each, then they sit out this step's batched decode
-            spec = [s for s in active if self.slot_req[s].spec_gamma > 0]
-            for slot in spec:
-                emitted += self._spec_slot_step(slot)
-            sset = set(spec)
-            # a spec round can retire its slot mid-list; re-filter
-            active = [s for s in active
-                      if s not in sset and self.slot_req[s] is not None]
+        se, active = self._spec_rounds(active)
+        emitted += se
         if not active:
             return emitted
+        if st is not None:
+            st["n_decoding"] = len(active)
         token = jnp.asarray(self.slot_tok[:, None])
         live_spec = [s for s in self.active_slots
                      if self.slot_req[s].spec_gamma > 0] \
             if self.drafts else []
         if self.chunked and np.any(self.slot_chunk_pos >= 0) or live_spec:
-            # chunking slots ride the batched decode fully masked: pos -1
-            # gives them valid length 0, and the KV write's page index
-            # (-1 // page_size = -1) wraps to the table row's LAST column
-            # — always unallocated mid-prompt (filled < plen <= max_len-1
-            # and page-aligned), so the scatter drops it.
+            # chunking and spec slots ride the batched decode fully
+            # masked: pos -1 gives them valid length 0 and the decode
+            # scatter's EXPLICIT write mask (decode_paged_attention)
+            # routes a dead row's KV write out of bounds — so the LIVE
+            # page table is handed to the dispatch as-is. (Historically
+            # pos -1 wrapped the write to the row's last table column and
+            # spec rows needed a defensive per-step table copy; the mask
+            # retired both.)
             posv = self.slot_pos.copy()
             if self.chunked:
                 posv[self.slot_chunk_pos >= 0] = -1
@@ -1414,17 +1757,7 @@ class Engine:
         else:
             pos = jnp.asarray(self.slot_pos)
         tbl = self.page_tbl if self.paged else None
-        if live_spec:
-            # spec slots CANNOT use the last-column trick: with
-            # prompt + max_new + γ == max_len the row's last column can be
-            # legitimately allocated and holds committed KV — a wrapped
-            # masked write would corrupt it. Hand the decode a copy with
-            # those rows fully unallocated (writes sanitized away,
-            # attention reads nothing).
-            tbl = self.page_tbl.copy()
-            tbl[live_spec, :] = -1
         if st is not None:
-            st["n_decoding"] = len(active)
             td0 = time.monotonic()
         with (self.obs.annotate("nbl.decode")
               if self.obs is not None else _NULLCTX):
@@ -1437,6 +1770,7 @@ class Engine:
                 logits, self.cache = self._decode_jit(self.params, token,
                                                       self.cache, pos)
         self.n_decode_steps += 1
+        self.n_legacy_dispatches += 1
         if self.chunked and np.any(self.slot_chunk_pos >= 0):
             self.n_interleaved_decode_steps += 1   # decode BETWEEN chunks
         # host-sync: readback -- THE per-step readback: every slot's logits
@@ -1505,7 +1839,15 @@ class Engine:
         s.update(n_slots=self.n_slots, n_decode_steps=self.n_decode_steps,
                  n_prefills=self.n_prefills,
                  n_prefill_tokens=self.n_prefill_tokens,
-                 n_rejected=n_rejected, n_cancelled=self.n_cancelled)
+                 n_rejected=n_rejected, n_cancelled=self.n_cancelled,
+                 # fused plan->execute->commit pipeline: the dispatch
+                 # split and the average planned-tokens/budget pressure
+                 # (0.0 when unbudgeted or fully legacy)
+                 n_fused_dispatches=self.n_fused_dispatches,
+                 n_legacy_dispatches=self.n_legacy_dispatches,
+                 step_tokens=self.step_tokens,
+                 step_budget_utilization=(self._budget_util_sum
+                                          / max(1, self._n_planned_steps)))
         if self.paged:
             s.update(
                 n_pages=self.n_pages,

@@ -209,13 +209,22 @@ class Scheduler:
         with self._lock:                     # serialize vs remove()'s scan
             self.queue.append(req)
 
-    def admit(self, free_slots: int) -> list[Request]:
+    def admit(self, free_slots: int,
+              budget: Optional[int] = None) -> list[Request]:
         """Pop FIFO requests for this step: at most min(free_slots,
         max_prefill_per_step) of them, stopping early before a prompt that
-        would push the step past ``max_prefill_tokens_per_step`` (the head
-        request always admits — see the class docstring)."""
+        would push the step past the token budget — the narrower of the
+        standing ``max_prefill_tokens_per_step`` and the caller's
+        per-step ``budget`` (the fused engine passes what its
+        decode-priority ``step_tokens`` budget left after charging decode
+        rows). The head request always admits — see the class
+        docstring — so an over-budget prompt cannot livelock."""
         n = min(free_slots, self.max_prefill_per_step, len(self.queue))
-        budget = self.max_prefill_tokens_per_step
+        if budget is not None:
+            budget = budget if self.max_prefill_tokens_per_step is None \
+                else min(budget, self.max_prefill_tokens_per_step)
+        else:
+            budget = self.max_prefill_tokens_per_step
         out: list[Request] = []
         toks = 0
         while len(out) < n:

@@ -70,6 +70,13 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
                      partial-prefill jit as prefill_chunked; the γ+1
                      logits rows come from prefill's n_logits window, so
                      the lowered graph matches the serving jit)
+      fused_step  -> {"tokens", "row_pos", "row_len", "page_tbl", "cache"}
+                     (the fused plan→execute→commit dispatch: a mixed
+                     (n_slots, W) batch — decode rows carry 1 valid token,
+                     chunk rows a page-aligned span up to W=seq_len,
+                     inactive rows length 0 — against the paged pools via
+                     the live per-slot page table; per-row last-valid
+                     logits come back (B, 1, V))
     """
     b, s = shape.global_batch, shape.seq_len
     dt = jnp.dtype(cfg.compute_dtype)
@@ -121,6 +128,17 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
         return {"tokens": sds((b, s), jnp.int32),
                 "prefix_tbl": sds((pb,), jnp.int32),
                 "prefix_len": sds((), jnp.int32),
+                "cache": paged_cache_shapes(cfg, b, 8 * s)}
+    if shape.kind == "fused_step":
+        from repro.models.paging import DEFAULT_PAGE_SIZE, pages_per_seq
+        # rows resume anywhere inside an 8*s max_len (same sizing rule as
+        # prefill_chunked: width-s chunks behind up to 7*s committed
+        # tokens); the table row covers the full reservation
+        pps = pages_per_seq(8 * s, DEFAULT_PAGE_SIZE)
+        return {"tokens": sds((b, s), jnp.int32),
+                "row_pos": sds((b,), jnp.int32),
+                "row_len": sds((b,), jnp.int32),
+                "page_tbl": sds((b, pps), jnp.int32),
                 "cache": paged_cache_shapes(cfg, b, 8 * s)}
     if shape.kind == "spec_verify":
         from repro.models.paging import DEFAULT_PAGE_SIZE, pages_per_seq

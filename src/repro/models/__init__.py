@@ -1,4 +1,5 @@
 from repro.models.transformer import (  # noqa: F401
     apply, count_params, init_params, loss_fn, prefill, decode_step,
+    fused_step,
 )
 from repro.models.kv_cache import init_cache  # noqa: F401

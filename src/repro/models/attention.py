@@ -338,13 +338,17 @@ def decode_paged_attention(cfg, p: dict, x: jax.Array, cache: dict,
     """Single-token decode against the paged KV layout (models/paging.py).
 
     x: (B, 1, d); cache: {k_pages, v_pages: (n_pages, KV, page_size, hd)};
-    pos: (B,) per-slot absolute position of the token being decoded;
-    page_tbl: (B, n_lpages) int32 physical page per logical page, -1 =
-    unallocated. The new K/V is scattered into page pos//page_size at
-    offset pos%page_size (mode="drop" skips slots whose table entry is
-    unallocated — i.e. inactive rows riding along in the batch), then the
-    paged-attention kernel (Pallas on TPU, XLA gather elsewhere) attends
-    positions [0, pos] with window/softcap masking. Pages are position-
+    pos: (B,) per-slot absolute position of the token being decoded, with
+    -1 marking an INACTIVE row riding along in the batch (a masked or empty
+    slot); page_tbl: (B, n_lpages) int32 physical page per logical page,
+    -1 = unallocated. The new K/V is scattered into page pos//page_size at
+    offset pos%page_size under an EXPLICIT write mask: rows with pos < 0 or
+    an unallocated table entry are routed to the out-of-bounds page index
+    and dropped (``mode="drop"``), so a masked row can never write into a
+    page another slot legitimately owns. Then the paged-attention kernel
+    (Pallas on TPU, XLA gather elsewhere) attends positions [0, pos] with
+    window/softcap masking — masked rows get length pos+1 = 0, every key
+    masked, and their (discarded) output stays finite. Pages are position-
     aligned so validity needs no kpos array: stale tokens a recycled page
     carries sit at positions >= the new owner's length and are masked until
     overwritten.
@@ -365,9 +369,11 @@ def decode_paged_attention(cfg, p: dict, x: jax.Array, cache: dict,
     k_new = apply_rope(k_new, ppos, cfg.rope_theta)
 
     rows = jnp.arange(b)
-    pid = page_tbl[rows, pos // page_size]                   # (B,)
-    pid = jnp.where(pid >= 0, pid, n_pages)                  # -1 -> OOB: drop
-    off = pos % page_size
+    live = pos >= 0                                          # explicit mask
+    safe_pos = jnp.where(live, pos, 0)
+    pid = page_tbl[rows, safe_pos // page_size]              # (B,)
+    pid = jnp.where(live & (pid >= 0), pid, n_pages)         # dead -> OOB: drop
+    off = safe_pos % page_size
     k_pages = cache["k_pages"].at[pid, :, off].set(
         k_new[:, :, 0].astype(cache["k_pages"].dtype), mode="drop")
     v_pages = cache["v_pages"].at[pid, :, off].set(
@@ -379,6 +385,79 @@ def decode_paged_attention(cfg, p: dict, x: jax.Array, cache: dict,
                        scale=cfg.attn_scale or hd ** -0.5, window=window,
                        softcap=cfg.attn_logit_softcap)
     out = out.reshape(b, 1, h * hd).astype(x.dtype)
+    return out @ p["wo"], {"k_pages": k_pages, "v_pages": v_pages}
+
+
+def fused_paged_attention(cfg, p: dict, x: jax.Array, cache: dict,
+                          row_pos: jax.Array, row_len: jax.Array,
+                          page_tbl: jax.Array, *,
+                          window: Optional[int]) -> tuple[jax.Array, dict]:
+    """Mixed-row step attention: decode rows AND prefill-chunk rows in ONE
+    dispatch against the shared paged KV layout.
+
+    x: (B, W, d) — each batch row carries up to W tokens of new work this
+    step (a decode row uses 1, a chunk row uses its page-aligned span);
+    row_pos: (B,) absolute position of each row's FIRST token;
+    row_len: (B,) valid tokens this step (0 = inactive row — an empty slot,
+    a speculative slot stepped separately, or pure padding);
+    page_tbl: (B, n_lpages) as in :func:`decode_paged_attention`.
+
+    Token t of row b sits at absolute position row_pos[b] + t. All valid
+    tokens are scattered into their pages first (explicit write mask: the
+    invalid tail of short rows routes to the out-of-bounds page and drops),
+    then token t attends positions [0, row_pos[b] + t] of its slot's
+    logical sequence through ``kernels.paged_mixed`` — write-before-attend
+    plus the per-query causal mask gives exact in-chunk causality, the
+    same semantics as a partial prefill of the span. On the XLA serving
+    path that is ONE page gather per slot feeding a dense masked softmax
+    (the W queries share the gathered keys as a GEMM — prefill-like cost
+    for a wide chunk row); on TPU the queries run as B*W virtual decode
+    rows through the Mosaic kernel, whose BlockSpec indexing makes the
+    per-row gather free. Invalid positions (row_len 0 rows, short-row
+    tails) get every key masked and a finite, discarded output. Within a
+    step no two valid tokens collide on a (page, offset) pair: tokens of
+    one row are consecutive positions, and distinct rows own distinct
+    pages.
+    """
+    from repro.kernels.paged_attention import paged_mixed
+
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b, w, _ = x.shape
+    n_pages, _, page_size, _ = cache["k_pages"].shape
+    row_pos = jnp.asarray(row_pos, jnp.int32)
+    row_len = jnp.asarray(row_len, jnp.int32)
+
+    q = _split_heads(x @ p["wq"], h, hd)                     # (B, h, W, hd)
+    k_new = _split_heads(x @ p["wk"], kvh, hd)
+    v_new = _split_heads(x @ p["wv"], kvh, hd)
+    tpos = row_pos[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+    valid = jnp.arange(w, dtype=jnp.int32)[None, :] < row_len[:, None]
+    ppos = tpos[:, None, :]                   # (B,1,W) broadcasts over heads
+    q = apply_rope(q, ppos, cfg.rope_theta)
+    k_new = apply_rope(k_new, ppos, cfg.rope_theta)
+
+    # scatter all B*W tokens; the explicit write mask routes the invalid
+    # tail (and rows over unallocated table entries) out of bounds
+    flat_valid = valid.reshape(-1)                           # (B*W,)
+    flat_pos = jnp.where(valid, tpos, 0).reshape(-1)
+    rows = jnp.repeat(jnp.arange(b), w)
+    pid = page_tbl[rows, flat_pos // page_size]
+    pid = jnp.where(flat_valid & (pid >= 0), pid, n_pages)
+    off = flat_pos % page_size
+    k_flat = k_new.transpose(0, 2, 1, 3).reshape(b * w, kvh, hd)
+    v_flat = v_new.transpose(0, 2, 1, 3).reshape(b * w, kvh, hd)
+    k_pages = cache["k_pages"].at[pid, :, off].set(
+        k_flat.astype(cache["k_pages"].dtype), mode="drop")
+    v_pages = cache["v_pages"].at[pid, :, off].set(
+        v_flat.astype(cache["v_pages"].dtype), mode="drop")
+
+    rep = h // kvh
+    qg = q.reshape(b, kvh, rep, w, hd)
+    out = paged_mixed(qg, k_pages, v_pages, page_tbl, row_pos, row_len,
+                      scale=cfg.attn_scale or hd ** -0.5, window=window,
+                      softcap=cfg.attn_logit_softcap)
+    out = (out.transpose(0, 3, 1, 2, 4).reshape(b, w, h * hd)
+           .astype(x.dtype))
     return out @ p["wo"], {"k_pages": k_pages, "v_pages": v_pages}
 
 

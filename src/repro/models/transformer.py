@@ -28,7 +28,7 @@ from repro.configs.base import Block, ModelConfig
 from repro.distributed import constrain
 from repro.models.attention import (
     cross_attention, decode_attention, decode_cross_attention, init_attn,
-    decode_paged_attention, self_attention,
+    decode_paged_attention, fused_paged_attention, self_attention,
 )
 from repro.models.layers import embed_tokens, init_mlp, mlp, rmsnorm, softcap
 from repro.models.moe import init_moe, moe_ffn
@@ -142,7 +142,7 @@ def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
 def _block_fwd(cfg: ModelConfig, blk: Block, p, x, *, mode: str,
                positions, enc, cache, pos, cache_len: int,
                page_tbl=None, paged: bool = False, valid_len=None,
-               prefix_tbl=None, prefix_len=None):
+               prefix_tbl=None, prefix_len=None, row_len=None):
     """Returns (x, new_cache, aux). ``cache`` is this block's slice.
 
     ``page_tbl``/``paged``/``valid_len`` serve the paged engine: a decode
@@ -152,6 +152,9 @@ def _block_fwd(cfg: ModelConfig, blk: Block, p, x, *, mode: str,
     ``prefix_tbl``/``prefix_len`` serve the PARTIAL prefill under prefix
     sharing: in prefill mode ``cache`` is then this layer's page pools and
     the attention gathers the shared-prefix KV through the table.
+    mode="fused" is the engine's single-dispatch mixed step (decode rows +
+    prefill-chunk rows over the shared page table): ``pos`` is the per-row
+    first-token position and ``row_len`` the per-row valid token count.
     """
     aux = jnp.zeros((), jnp.float32)
     new_cache = None
@@ -167,6 +170,10 @@ def _block_fwd(cfg: ModelConfig, blk: Block, p, x, *, mode: str,
             else:
                 h, new_cache = decode_attention(cfg, p["mixer"], h, cache,
                                                 pos, window=blk.window)
+        elif mode == "fused":
+            h, new_cache = fused_paged_attention(
+                cfg, p["mixer"], h, cache, pos, row_len, page_tbl,
+                window=blk.window)
         else:
             prefix = None
             if mode == "prefill" and prefix_tbl is not None:
@@ -179,7 +186,9 @@ def _block_fwd(cfg: ModelConfig, blk: Block, p, x, *, mode: str,
         x = x + h.astype(x.dtype)
     elif blk.kind == "cross_attn":
         h = rmsnorm(x, p["norm1"], cfg.norm_eps)
-        if mode == "decode":
+        if mode in ("decode", "fused"):
+            # decode_cross_attention is query-length agnostic (its queries
+            # carry no positions), so fused multi-token rows reuse it as-is
             h, new_cache = decode_cross_attention(cfg, p["mixer"], h, cache)
         else:
             h, (k, v) = cross_attention(cfg, p["mixer"], h, enc=enc)
@@ -187,6 +196,9 @@ def _block_fwd(cfg: ModelConfig, blk: Block, p, x, *, mode: str,
                 new_cache = {"k": k.astype(x.dtype), "v": v.astype(x.dtype)}
         x = x + h.astype(x.dtype)
     elif blk.kind == "mamba":
+        assert mode != "fused", \
+            "fused step cannot resume SSM state mid-sequence (engine gates " \
+            "mamba stacks onto the legacy path)"
         h = rmsnorm(x, p["norm1"], cfg.norm_eps)
         if mode == "decode":
             h, new_cache = mamba_decode(cfg, p["mixer"], h, cache)
@@ -279,7 +291,7 @@ def _stack_fwd(cfg: ModelConfig, params: dict, x, *, mode: str,
                positions=None, enc=None, cache=None, pos=None,
                cache_len: int = 0, remat: bool = False,
                page_tbl=None, paged: bool = False, valid_len=None,
-               prefix_tbl=None, prefix_len=None):
+               prefix_tbl=None, prefix_len=None, row_len=None):
     """Run the full stack. Returns (x, new_cache_or_None, aux_sum)."""
     aux_total = jnp.zeros((), jnp.float32)
     new_groups = []
@@ -298,7 +310,8 @@ def _stack_fwd(cfg: ModelConfig, params: dict, x, *, mode: str,
                     cfg, blk, p_u, xc, mode=mode, positions=positions,
                     enc=enc, cache=c_u, pos=pos, cache_len=cache_len,
                     page_tbl=page_tbl, paged=paged, valid_len=valid_len,
-                    prefix_tbl=prefix_tbl, prefix_len=prefix_len)
+                    prefix_tbl=prefix_tbl, prefix_len=prefix_len,
+                    row_len=row_len)
                 auxc = auxc + aux_u
                 outs.append(nc)
             return (xc, auxc), outs
@@ -312,11 +325,12 @@ def _stack_fwd(cfg: ModelConfig, params: dict, x, *, mode: str,
         xs = (gp["scanned"], gcache)
         (x, aux_total), caches_out = jax.lax.scan(
             fn, (x, aux_total), xs, length=g.repeat)
-        if mode in ("prefill", "decode"):
+        if mode in ("prefill", "decode", "fused"):
             new_groups.append({"blocks": caches_out})
         x = constrain(x, "dp", None, None)
 
-    new_cache = {"groups": new_groups} if mode in ("prefill", "decode") else None
+    new_cache = ({"groups": new_groups}
+                 if mode in ("prefill", "decode", "fused") else None)
     return x, new_cache, aux_total
 
 
@@ -441,6 +455,34 @@ def decode_step(cfg: ModelConfig, params: dict, token, cache, pos,
     x, new_cache, _ = _stack_fwd(cfg, params, x, mode="decode", cache=cache,
                                  pos=pos, page_tbl=page_tbl)
     return _logits(cfg, params, x), new_cache
+
+
+def fused_step(cfg: ModelConfig, params: dict, tokens, cache, row_pos,
+               row_len, page_tbl):
+    """One FUSED engine step: a mixed batch of decode rows (1 new token) and
+    page-aligned prefill-chunk rows (up to W new tokens) executed against
+    the shared paged cache in a single dispatch (launch/engine's plan →
+    execute → commit pipeline; see docs/architecture.md).
+
+    tokens: (B, W) int32, each row right-padded past its valid span;
+    row_pos: (B,) absolute position of each row's FIRST token; row_len:
+    (B,) valid tokens this step — 1 for a decode row, the chunk span for a
+    prefill row, 0 for an inactive row (empty slot / speculative slot
+    stepped separately); page_tbl: (B, n_lpages) int32.
+
+    Returns (logits (B,1,V), new_cache): per-row ``n_logits``-style
+    extraction at each row's LAST valid token (a decode row's next-token
+    logits; a final chunk's seed logits). Inactive rows yield finite
+    garbage logits the caller discards. Requires a paged, SSM-free stack.
+    """
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], tokens, dt)
+    x, new_cache, _ = _stack_fwd(cfg, params, x, mode="fused", cache=cache,
+                                 pos=row_pos, row_len=row_len,
+                                 page_tbl=page_tbl)
+    idx = jnp.clip(jnp.asarray(row_len, jnp.int32) - 1, 0)
+    x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    return _logits(cfg, params, x_last), new_cache
 
 
 # --------------------------------------------------------------------------

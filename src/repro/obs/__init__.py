@@ -65,6 +65,8 @@ class Observability:
         self.trace_annotations = bool(trace_annotations)
         self._null = nullcontext()       # shared: annotate() allocates 0
         self._last_evictions = 0         # delta base for the counter
+        self._last_fused = 0             # dispatch-counter delta bases:
+        self._last_legacy = 0            # registry == engine, end-of-step
 
         r = self.registry
         # --- metric catalog (docs/observability.md) --- counters
@@ -120,6 +122,13 @@ class Observability:
         self.spec_tokens = r.counter(
             "nbl_spec_tokens_total",
             "tokens emitted by speculative bursts (accepted + corrections)")
+        self.fused_dispatches = r.counter(
+            "nbl_fused_dispatches_total",
+            "fused-step jit launches (ONE per fused step with work)")
+        self.legacy_dispatches = r.counter(
+            "nbl_legacy_dispatches_total",
+            "legacy step-path jit launches (batched decode + chunk "
+            "prefills — the dispatches the fused jit replaces)")
         # --- gauges
         self.g_queue = r.gauge("nbl_queue_depth", "scheduler queue length")
         self.g_active = r.gauge("nbl_slots_active", "occupied slots")
@@ -128,6 +137,10 @@ class Observability:
         self.g_pages_free = r.gauge("nbl_pages_free", "allocator free pages")
         self.g_prefix = r.gauge("nbl_prefix_index_entries",
                                 "PrefixIndex published pages")
+        self.g_budget_util = r.gauge(
+            "nbl_step_budget_utilization",
+            "last step's planned tokens / step_tokens budget "
+            "(0.0 when unbudgeted or on the legacy path)")
         # --- histograms (fixed log-spaced latency buckets)
         self.h_ttft = r.histogram("nbl_ttft_seconds",
                                   "submit -> first token")
@@ -261,7 +274,9 @@ class Observability:
 
     def on_step(self, engine, *, t0: float, t1: float, dispatch_s: float,
                 n_decoding: int, n_chunking: int, tokens_emitted: int,
-                prefill_tokens: int, chunk_tokens: int) -> None:
+                prefill_tokens: int, chunk_tokens: int,
+                tokens_planned: int = 0,
+                budget_utilization: float = 0.0) -> None:
         """End-of-step rollup: counters, gauges, step histograms, the
         engine trace track, and one StepRecord. Reads only host state."""
         host_s = t1 - t0
@@ -271,6 +286,15 @@ class Observability:
             self.h_step_dispatch.observe(dispatch_s)
             if n_chunking:
                 self.interleaved.inc()
+        # dispatch-split counters mirror the engine's lifetime counts via
+        # one end-of-step delta (the evictions pattern): registry ==
+        # engine exactly, wherever inside the step the dispatch happened
+        fused_cum = getattr(engine, "n_fused_dispatches", 0)
+        legacy_cum = getattr(engine, "n_legacy_dispatches", 0)
+        self.fused_dispatches.inc(fused_cum - self._last_fused)
+        self.legacy_dispatches.inc(legacy_cum - self._last_legacy)
+        self._last_fused, self._last_legacy = fused_cum, legacy_cum
+        self.g_budget_util.set(budget_utilization)
         n_queued = len(engine.scheduler)
         self.g_queue.set(n_queued)
         self.g_active.set(len(engine.active_slots))
@@ -282,7 +306,11 @@ class Observability:
             n_decoding=n_decoding, n_chunking=n_chunking, n_queued=n_queued,
             tokens_emitted=tokens_emitted, prefill_tokens=prefill_tokens,
             chunk_tokens=chunk_tokens,
-            preemptions_cum=engine.n_preemptions)
+            preemptions_cum=engine.n_preemptions,
+            tokens_planned=tokens_planned,
+            budget_utilization=budget_utilization,
+            fused_dispatches_cum=fused_cum,
+            legacy_dispatches_cum=legacy_cum)
         if engine.paged:
             alloc = engine.allocator
             rec.pages_in_use = alloc.in_use

@@ -38,6 +38,12 @@ class StepRecord:
     prefix_entries: int = 0
     evictions_cum: int = 0       # PrefixIndex LRU evictions, lifetime
     preemptions_cum: int = 0
+    # fused plan->execute->commit pipeline (PR 10): per-step budget
+    # pressure and the lifetime dispatch split
+    tokens_planned: int = 0      # StepPlan.tokens_planned (0 on legacy)
+    budget_utilization: float = 0.0  # planned/budget; 0.0 when unbounded
+    fused_dispatches_cum: int = 0    # fused-step jit launches, lifetime
+    legacy_dispatches_cum: int = 0   # legacy decode+chunk jit launches
 
 
 class StepTimeline:

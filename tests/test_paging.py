@@ -75,6 +75,48 @@ def test_paged_kernel_matches_xla_ref(rep, window, softcap):
     assert np.isfinite(np.asarray(out)).all()
 
 
+@pytest.mark.parametrize("rep,window,softcap", [
+    (1, None, None),
+    (2, 6, None),
+    (2, None, 30.0),
+])
+def test_paged_mixed_matches_virtual_rows(rep, window, softcap):
+    """The fused step's mixed-row attention (one per-slot gather + dense
+    masked softmax) == the same queries run as B*W virtual decode rows
+    through the interpret-mode Pallas kernel — the TPU dispatch route —
+    across a decode row, a mid-chunk row, an inactive row, and a short
+    row with an invalid tail."""
+    from repro.kernels.paged_attention import paged_attention, paged_mixed_xla
+
+    rng = np.random.default_rng(1)
+    b, kv, hd, ps, npg, pool, w = 4, 2, 16, 8, 4, 12, 4
+    q = jnp.asarray(rng.standard_normal((b, kv, rep, w, hd)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((pool, kv, ps, hd)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((pool, kv, ps, hd)), jnp.float32)
+    tbl = np.full((b, npg), -1, np.int32)
+    tbl[0, :3] = [4, 7, 1]          # decode row at pos 17 (18 tokens)
+    tbl[1, :2] = [2, 8]             # chunk row resuming at pos 8
+    tbl[2, :1] = [3]                # short row: 2 valid + 2 invalid tail
+    row_pos = jnp.asarray([17, 8, 1, 0], jnp.int32)
+    row_len = jnp.asarray([1, w, 2, 0], jnp.int32)   # slot 3 inactive
+
+    out = paged_mixed_xla(q, kp, vp, jnp.asarray(tbl), row_pos, row_len,
+                          window=window, softcap=softcap)
+
+    qv = jnp.transpose(q, (0, 3, 1, 2, 4)).reshape(b * w, kv, rep, hd)
+    tpos = np.asarray(row_pos)[:, None] + np.arange(w)[None, :]
+    valid = np.arange(w)[None, :] < np.asarray(row_len)[:, None]
+    lens = jnp.asarray(np.where(valid, tpos + 1, 0).reshape(-1), jnp.int32)
+    ref = paged_attention(qv, kp, vp,
+                          jnp.asarray(np.repeat(tbl, w, axis=0)), lens,
+                          window=window, softcap=softcap, interpret=True)
+    ref = ref.reshape(b, w, kv, rep, hd).transpose(0, 2, 3, 1, 4)
+    vmask = valid[:, None, None, :, None]            # invalid: both finite,
+    np.testing.assert_allclose(np.asarray(out) * vmask,     # values differ
+                               np.asarray(ref) * vmask, atol=2e-5, rtol=2e-5)
+    assert np.isfinite(np.asarray(out)).all()
+
+
 # ------------------------------------------------ engine decode parity -----
 
 @pytest.mark.parametrize("arch", ["tiny-dense", "tiny-swa", "tiny-gemma",

@@ -5,7 +5,12 @@ NBL self-drafting: γ-token draft bursts, one-shot verify, rollback —
 mixed with plain requests whenever a prompt leaves no room for a
 candidate span), asserting TOKEN-EXACT parity against
 the single-request generate() oracle and allocator/refcount invariants
-after every step. An ASYNC variant replays the same workloads through the
+after every step. Every mode replays through BOTH step paths — the fused
+plan->execute->commit pipeline (the default) and the legacy two-dispatch
+path (``Engine(fused_step=False)``, the parity oracle) — and workloads
+randomly carry a ``step_tokens`` decode-priority budget (including
+sub-page values, exercising the min-progress rule), so fused-vs-legacy
+token parity is anchored to one oracle from both sides. An ASYNC variant replays the same workloads through the
 AsyncEngine host loop — concurrent submit/stream/cancel from worker
 threads (cancel mid-chunking, cancel-while-prefix-referenced, and
 cancel-between-spec-bursts fall out
@@ -156,6 +161,13 @@ def _draw_workload(seed: int) -> dict:
         n_pages=int(rng.integers(pps, n_slots * pps + 1)),
         chunk_tokens=int(rng.choice([PAGE_SIZE, 3 * PAGE_SIZE, MAX_LEN * 2])),
         shared_prefix_len=sys_len,
+        # decode-priority step budget (fused path): None = unbounded,
+        # sub-page values hit the min-progress rule, page-scale values
+        # throttle chunk rows and admission
+        step_tokens=(None if (r := rng.random()) < 0.5
+                     else int(rng.integers(1, PAGE_SIZE))
+                     if r < 0.7
+                     else int(rng.integers(PAGE_SIZE, 4 * PAGE_SIZE + 1))),
     )
 
 
@@ -202,7 +214,7 @@ def _check_obs(eng: Engine, obs: Observability) -> None:
     obs.tracer.validate_all()
 
 
-def _replay(mode: str, seed: int) -> None:
+def _replay(mode: str, seed: int, fused: bool = True) -> None:
     w = _draw_workload(seed)
     cfg, params = _setup(w["arch"])
     kw = dict(MODES[mode])
@@ -213,7 +225,11 @@ def _replay(mode: str, seed: int) -> None:
         kw["drafts"] = {DRAFT_M: _draft(w["arch"])}
     obs = Observability()
     eng = Engine(cfg, params, max_len=MAX_LEN, n_slots=w["n_slots"],
-                 eos_id=w["eos_id"], obs=obs, **kw)
+                 eos_id=w["eos_id"], obs=obs, fused_step=fused,
+                 step_tokens=w["step_tokens"], **kw)
+    if not fused:
+        assert not eng.fused         # forced onto the legacy parity oracle
+        assert eng.n_fused_dispatches == 0
     if eng.paged:
         n_pages = w["n_pages"]
         eng.allocator = PageAllocator(n_pages)
@@ -253,7 +269,7 @@ def _replay(mode: str, seed: int) -> None:
         eng.allocator.check_invariants()
 
 
-def _replay_async(mode: str, seed: int) -> None:
+def _replay_async(mode: str, seed: int, fused: bool = True) -> None:
     """Async-mode replay of the same seeded workload: worker threads
     submit/stream/cancel concurrently against the AsyncEngine host loop,
     allocator/refcount/page-table invariants are checked after EVERY step
@@ -272,7 +288,8 @@ def _replay_async(mode: str, seed: int) -> None:
         kw["drafts"] = {DRAFT_M: _draft(w["arch"])}
     obs = Observability()
     eng = Engine(cfg, params, max_len=MAX_LEN, n_slots=w["n_slots"],
-                 eos_id=w["eos_id"], obs=obs, **kw)
+                 eos_id=w["eos_id"], obs=obs, fused_step=fused,
+                 step_tokens=w["step_tokens"], **kw)
     if eng.paged:
         eng.allocator = PageAllocator(w["n_pages"])
         eng.n_pages = w["n_pages"]
@@ -345,28 +362,38 @@ def _replay_async(mode: str, seed: int) -> None:
 N_EXAMPLES = int(os.environ.get("NBL_FUZZ_EXAMPLES", "3"))
 
 
+PATHS = {"fused": True, "legacy": False}
+
+
+@pytest.mark.parametrize("path", list(PATHS))
 @pytest.mark.parametrize("mode", list(MODES))
 @pytest.mark.parametrize("seed", range(N_EXAMPLES))
-def test_serving_oracle_fuzz(mode, seed):
+def test_serving_oracle_fuzz(mode, seed, path):
     """Deterministic fuzz sweep: NBL_FUZZ_EXAMPLES seeds x 6 engine modes
-    (CI runs 50 x 6 = 300 examples)."""
-    _replay(mode, seed)
+    x {fused, legacy} step paths (CI runs 50 x 6 x 2 = 600 examples).
+    Both paths replay the identical workload against the same oracle, so
+    fused-vs-legacy parity is token-exact by transitivity."""
+    _replay(mode, seed, fused=PATHS[path])
 
 
+@pytest.mark.parametrize("path", list(PATHS))
 @pytest.mark.parametrize("mode", list(MODES))
 @pytest.mark.parametrize("seed", range(N_EXAMPLES))
-def test_async_serving_fuzz(mode, seed):
+def test_async_serving_fuzz(mode, seed, path):
     """Async host-loop fuzz: the same seeded workloads submitted from
     concurrent worker threads with streamed consumption and seeded
     mid-stream cancellation, per-step invariants, oracle parity for the
-    survivors and prefix parity for the cancelled."""
-    _replay_async(mode, seed)
+    survivors and prefix parity for the cancelled — through both step
+    paths."""
+    _replay_async(mode, seed, fused=PATHS[path])
 
 
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 2**31 - 1))
 def test_serving_oracle_property(seed):
     """Hypothesis-driven variant of the same oracle: arbitrary seeds,
-    shrinking on failure; every mode replays the identical workload."""
+    shrinking on failure; every mode replays the identical workload
+    through both step paths."""
     for mode in MODES:
-        _replay(mode, seed)
+        _replay(mode, seed, fused=True)
+        _replay(mode, seed, fused=False)

@@ -1,0 +1,290 @@
+"""Token-budget edge cases for the fused plan→execute→commit pipeline:
+StepPlan / chunk_span arithmetic (sub-page budgets, exact exhaustion,
+min-progress), decode-only and prefill-only steps, decode starvation
+(decode rows are never displaced by chunk rows), the one-dispatch-per-
+step contract, and the silent fused-path gates."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.engine import Engine
+from repro.launch.serve import generate
+from repro.launch.stepplan import (
+    ChunkRow, StepPlan, chunk_span, decode_first_budget, pow2_ceil,
+)
+from repro.models import init_params
+
+
+def _setup(arch="tiny-dense", seed=0):
+    cfg = get_config(arch)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    return cfg, params
+
+
+def _ref(cfg, params, prompt, max_new):
+    out = generate(cfg, params, jnp.asarray(prompt)[None], max_new=max_new)
+    return np.asarray(out)[0]
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            for n in lens]
+
+
+# ------------------------------------------------ plan arithmetic ----------
+
+def test_pow2_ceil():
+    assert [pow2_ceil(n) for n in (1, 2, 3, 4, 5, 8, 9)] \
+        == [1, 2, 4, 4, 8, 8, 16]
+
+
+def test_stepplan_properties():
+    rows = [ChunkRow(0, 0, 4, False), ChunkRow(1, 4, 10, True)]
+    assert rows[1].length == 6
+    plan = StepPlan(budget=16, decode_slots=[2, 3], chunk_rows=rows)
+    assert plan.tokens_planned == 12            # 2 decode + 4 + 6
+    assert plan.width == 8                      # pow2_ceil(longest span 6)
+    assert plan.utilization == 12 / 16
+    assert plan.has_work()
+    empty = StepPlan(budget=None)
+    assert not empty.has_work()
+    assert empty.width == 1                     # decode-only jit variant
+    assert empty.utilization == 0.0
+    # unbounded budget reports NO pressure even with work planned
+    assert StepPlan(budget=None, decode_slots=[0]).utilization == 0.0
+
+
+def test_decode_first_budget():
+    assert decode_first_budget(None, 7) is None     # unbounded passthrough
+    assert decode_first_budget(8, 3) == 5
+    assert decode_first_budget(2, 2) == 0           # decode eats it all
+    assert decode_first_budget(2, 5) == 0           # never negative
+
+
+def test_chunk_span_edges():
+    # unbounded: only the per-row cap and the prompt bound the span
+    assert chunk_span(0, 16, 8, None, 4) == 8
+    assert chunk_span(12, 14, 8, None, 4) == 14     # final partial tail
+    # budget exhausted -> empty span, the row waits
+    assert chunk_span(4, 16, 8, 0, 4) == 4
+    assert chunk_span(4, 16, 8, -3, 4) == 4
+    # a chunk that EXACTLY exhausts the budget passes through untrimmed
+    assert chunk_span(0, 8, 8, 8, 4) == 8
+    # tighter budget rounds DOWN to a page multiple
+    assert chunk_span(0, 16, 8, 7, 4) == 4
+    # min-progress: a budget smaller than one page still grants one page
+    assert chunk_span(0, 16, 8, 3, 4) == 4
+    assert chunk_span(0, 16, 8, 1, 4) == 4
+    # ... or the final sub-page tail when that is all that is left
+    assert chunk_span(12, 14, 8, 1, 4) == 14
+
+
+# ------------------------------------------------ engine: budget edges -----
+
+def test_sub_page_budget_drains_one_page_per_step():
+    """step_tokens smaller than one page cannot livelock a chunking slot:
+    min-progress grants exactly one page per step, so a 16-token prompt
+    drains in 4 chunk steps even under a 3-token budget."""
+    cfg, params = _setup()
+    prompt = _prompts(cfg, [16], seed=7)[0]
+    want = _ref(cfg, params, prompt, 2)
+
+    eng = Engine(cfg, params, max_len=24, n_slots=1, paged=True, page_size=4,
+                 chunked_prefill=True, prefill_chunk_tokens=8, step_tokens=3)
+    assert eng.fused
+    rid = eng.submit(prompt, 2)
+    out = eng.run(max_steps=50)
+    np.testing.assert_array_equal(out[rid], want)
+    # one page per step despite the 8-token per-row cap
+    assert eng.n_chunks == 4
+    s = eng.stats()
+    # chunk steps each planned 4 tokens against a 3-token budget
+    assert s["step_budget_utilization"] > 1.0
+    assert s["step_tokens"] == 3
+    eng.allocator.check_invariants()
+    assert eng.allocator.in_use == 0
+
+
+def test_chunk_exactly_exhausts_budget():
+    """A prompt whose single chunk equals step_tokens lands in ONE fused
+    dispatch at utilization exactly 1.0."""
+    cfg, params = _setup()
+    prompt = _prompts(cfg, [8], seed=8)[0]
+    want = _ref(cfg, params, prompt, 3)
+
+    eng = Engine(cfg, params, max_len=16, n_slots=1, paged=True, page_size=4,
+                 chunked_prefill=True, prefill_chunk_tokens=8, step_tokens=8)
+    rid = eng.submit(prompt, 3)
+    eng.step()                                  # admit + whole-prompt chunk
+    assert eng.n_chunks == 1
+    assert eng.n_fused_dispatches == 1
+    assert eng.stats()["step_budget_utilization"] == 1.0
+    out = eng.run(max_steps=20)
+    np.testing.assert_array_equal(out[rid], want)
+
+
+def test_prefill_only_then_decode_only_steps():
+    """A lone long prompt produces pure prefill-only steps (no decode
+    rows -> n_decode_steps untouched) followed by pure decode-only steps,
+    each still exactly one fused dispatch."""
+    cfg, params = _setup()
+    prompt = _prompts(cfg, [16], seed=9)[0]
+    want = _ref(cfg, params, prompt, 3)
+
+    eng = Engine(cfg, params, max_len=24, n_slots=2, paged=True, page_size=4,
+                 chunked_prefill=True, prefill_chunk_tokens=4)
+    rid = eng.submit(prompt, 3)
+    for _ in range(4):                          # 4 prefill-only chunk steps
+        eng.step()
+    assert eng.n_chunks == 4
+    assert eng.n_decode_steps == 0              # never a decode row yet
+    out = eng.run(max_steps=20)                 # 2 decode-only steps
+    np.testing.assert_array_equal(out[rid], want)
+    assert eng.n_decode_steps == 2              # seed rode the final chunk
+    assert eng.n_fused_dispatches == 6
+    assert eng.n_interleaved_decode_steps == 0
+    # unbounded budget: no pressure to report
+    assert eng.stats()["step_budget_utilization"] == 0.0
+
+
+def test_decode_rows_never_displaced_by_chunks():
+    """Decode starvation guarantee: with step_tokens equal to the number
+    of decoding slots the whole budget is charged to decode first — every
+    decoder emits on every step while the chunking row is granted NOTHING
+    until a decoder retires and frees budget."""
+    cfg, params = _setup()
+    shorts = _prompts(cfg, [4, 4], seed=10)
+    longp = _prompts(cfg, [16], seed=11)[0]
+    refs = [_ref(cfg, params, p, 8) for p in shorts]
+    lref = _ref(cfg, params, longp, 4)
+
+    eng = Engine(cfg, params, max_len=32, n_slots=3, paged=True, page_size=4,
+                 chunked_prefill=True, prefill_chunk_tokens=4, step_tokens=2)
+    sids = [eng.submit(p, 8) for p in shorts]
+    eng.step()                                  # admit + seed short 0
+    eng.step()                                  # admit + seed short 1
+    lid = eng.submit(longp, 4)
+
+    starved, steps = 0, 0
+    while eng.has_work and steps < 100:
+        both = sum(1 for r in eng.slot_req
+                   if r is not None and r.rid in sids) == 2
+        lslot = next((i for i, r in enumerate(eng.slot_req)
+                      if r is not None and r.rid == lid), None)
+        lpos = None if lslot is None else int(eng.slot_chunk_pos[lslot])
+        e = eng.step()
+        steps += 1
+        if both and lpos == 0:
+            # budget 2 == 2 decoders: both decode rows ran ...
+            assert e == 2
+            # ... and the chunk row was displaced, not the decoders
+            assert int(eng.slot_chunk_pos[lslot]) == 0
+            starved += 1
+    assert not eng.has_work
+    assert starved >= 4
+    for sid, want in zip(sids, refs):
+        np.testing.assert_array_equal(eng.finished[sid].tokens, want)
+    np.testing.assert_array_equal(eng.finished[lid].tokens, lref)
+    eng.allocator.check_invariants()
+    assert eng.allocator.in_use == 0
+
+
+def test_budget_grants_oldest_chunker_first():
+    """Two chunking prompts under a one-page budget: the older admission
+    drains completely before the younger makes any progress (strict
+    oldest-first granting, no round-robin)."""
+    cfg, params = _setup()
+    p1, p2 = _prompts(cfg, [16, 16], seed=12)
+
+    eng = Engine(cfg, params, max_len=24, n_slots=2, paged=True, page_size=4,
+                 chunked_prefill=True, prefill_chunk_tokens=4, step_tokens=4)
+    r1, r2 = eng.submit(p1, 2), eng.submit(p2, 2)
+    for _ in range(4):
+        eng.step()
+    s1 = next(i for i, r in enumerate(eng.slot_req)
+              if r is not None and r.rid == r1)
+    s2 = next(i for i, r in enumerate(eng.slot_req)
+              if r is not None and r.rid == r2)
+    assert eng.slot_chunk_pos[s1] < 0           # p1 fully chunked, decoding
+    assert eng.slot_chunk_pos[s2] == 0          # p2 admitted but untouched
+    out = eng.run(max_steps=50)
+    np.testing.assert_array_equal(out[r1], _ref(cfg, params, p1, 2))
+    np.testing.assert_array_equal(out[r2], _ref(cfg, params, p2, 2))
+
+
+# ------------------------------------------------ dispatch contract --------
+
+def test_one_fused_dispatch_per_step_mixed_workload():
+    """The fused pipeline's core contract: a mixed decode+chunk workload
+    executes AT MOST one device dispatch per step() and zero legacy
+    dispatches, with token-exact outputs."""
+    cfg, params = _setup()
+    shorts = _prompts(cfg, [4, 5], seed=3)
+    longp = _prompts(cfg, [24], seed=4)[0]
+    refs = [_ref(cfg, params, p, 6) for p in shorts]
+    lref = _ref(cfg, params, longp, 4)
+
+    eng = Engine(cfg, params, max_len=40, n_slots=3, paged=True, page_size=4,
+                 chunked_prefill=True, prefill_chunk_tokens=4, step_tokens=12)
+    rids = [eng.submit(p, 6) for p in shorts] + [eng.submit(longp, 4)]
+    assert eng.fused
+    worked, steps = 0, 0
+    while eng.has_work and steps < 200:
+        before = eng.n_fused_dispatches
+        eng.step()
+        d = eng.n_fused_dispatches - before
+        assert d in (0, 1)                      # never a second dispatch
+        worked += d
+        steps += 1
+    assert not eng.has_work
+    assert eng.n_fused_dispatches == worked
+    assert eng.n_legacy_dispatches == 0
+    assert eng.n_interleaved_decode_steps >= 1  # decodes rode chunk steps
+    for rid, want in zip(rids, refs + [lref]):
+        np.testing.assert_array_equal(eng.finished[rid].tokens, want)
+    eng.allocator.check_invariants()
+    assert eng.allocator.in_use == 0
+    s = eng.stats()
+    assert s["n_fused_dispatches"] == worked
+    assert s["n_legacy_dispatches"] == 0
+    assert s["step_tokens"] == 12
+
+
+def test_legacy_path_is_the_parity_oracle():
+    """Engine(fused_step=False) keeps the two-dispatch path: identical
+    tokens, zero fused dispatches, legacy dispatch counter live."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg, [9, 16], seed=5)
+    refs = [_ref(cfg, params, p, 5) for p in prompts]
+
+    eng = Engine(cfg, params, max_len=32, n_slots=2, paged=True, page_size=4,
+                 chunked_prefill=True, prefill_chunk_tokens=4,
+                 fused_step=False, step_tokens=8)
+    assert not eng.fused
+    rids = [eng.submit(p, 5) for p in prompts]
+    out = eng.run(max_steps=300)
+    for rid, want in zip(rids, refs):
+        np.testing.assert_array_equal(out[rid], want)
+    assert eng.n_fused_dispatches == 0
+    assert eng.n_legacy_dispatches > 0
+
+
+def test_fused_gates_and_validation():
+    """Fused mode silently falls back to legacy off the paged path and on
+    SSM stacks; step_tokens is validated at construction."""
+    cfg, params = _setup()
+    with pytest.raises(ValueError, match="step_tokens"):
+        Engine(cfg, params, max_len=16, n_slots=1, paged=True, page_size=4,
+               step_tokens=0)
+    ring = Engine(cfg, params, max_len=16, n_slots=1)       # not paged
+    assert not ring.fused
+    zcfg = get_config("tiny-zamba")
+    zparams = init_params(jax.random.PRNGKey(0), zcfg)
+    zeng = Engine(zcfg, zparams, max_len=16, n_slots=1, paged=True,
+                  page_size=4)
+    assert not zeng.fused                                   # SSM gate
